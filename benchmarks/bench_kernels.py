@@ -1,0 +1,37 @@
+"""Pallas kernel micro-benchmarks (interpret mode — correctness-scale
+numbers only; the BlockSpec VMEM analysis is the TPU-relevant output).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.ops import sparse_linear_op, sstep_gram_and_v
+from repro.sparse.bsr import bsr_from_csr
+from repro.sparse.synthetic import make_skewed_csr
+
+
+def run() -> None:
+    a = make_skewed_csr(512, 2048, 40, 1.0, seed=0)
+    bsr = bsr_from_csr(a)
+    emit(
+        "kernels/bsr/layout",
+        0.0,
+        f"tile=8x128;tiles_per_row={bsr.max_blocks};density={bsr.density:.3f};"
+        f"vmem_per_step_bytes={8 * 128 * 4 + 128 * 4 + 8 * 4}",
+    )
+    op = sparse_linear_op(a)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(2048).astype(np.float32))
+    t = time_fn(lambda: op.matvec(x), repeats=3, warmup=1)
+    emit("kernels/bsr/matvec-interp", t * 1e6, "y=Ax 512x2048 interpret-mode")
+    u = jnp.asarray(np.random.default_rng(1).standard_normal(512).astype(np.float32))
+    t = time_fn(lambda: op.rmatvec(u), repeats=3, warmup=1)
+    emit("kernels/bsr/rmatvec-interp", t * 1e6, "g=ATu via BSR(AT) forward kernel")
+
+    y = jnp.asarray(np.random.default_rng(2).standard_normal((128, 4096)).astype(np.float32))
+    xx = jnp.asarray(np.random.default_rng(3).standard_normal(4096).astype(np.float32))
+    t = time_fn(lambda: sstep_gram_and_v(y, xx, bk=512), repeats=3, warmup=1)
+    vmem = 128 * 512 * 4 + 128 * 128 * 4 + 512 * 4
+    emit("kernels/gram/fused-interp", t * 1e6, f"sb=128 n=4096 bk=512;vmem_bytes={vmem}")

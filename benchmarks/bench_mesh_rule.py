@@ -1,0 +1,61 @@
+"""Paper Table 4 — topology-respecting mesh rule vs the empirical best.
+
+The rule p_c* = max(⌈nw/L_cap⌉, min(R, p)) must reproduce the paper's
+predictions on all four rows, and the cost model must place the rule's
+mesh within a small factor of the best mesh in a full factorization
+sweep (paper: within 9% on url).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.costmodel import PERLMUTTER, TPU_V5E, HybridConfig, hybrid_epoch_cost, topology_rule
+from repro.sparse.synthetic import DATASET_STATS
+
+TABLE4 = [
+    ("url", 256, (4, 64), (8, 32)),
+    ("synthetic_uniform", 128, (2, 64), (2, 64)),
+    ("news20", 64, (1, 64), (1, 64)),
+    ("rcv1", 16, (1, 16), (1, 16)),
+]
+
+
+def run() -> None:
+    for name, p, paper_rule, paper_best in TABLE4:
+        st = DATASET_STATS[name]
+        got = topology_rule(p, st.n, PERLMUTTER)
+        emit(
+            f"table4/rule/{name}",
+            0.0,
+            f"rule={got};paper_rule={paper_rule};paper_best={paper_best};"
+            f"match={'yes' if got == paper_rule else 'NO'}",
+        )
+
+    # full mesh sweep at p=256 on url stats: the rule's mesh must be
+    # within 2x of the sweep's best under Eq. (4) (paper: within 9%
+    # measured; our model is the ranking tool, not a clock)
+    st = DATASET_STATS["url"]
+    best = None
+    costs = {}
+    p = 256
+    p_r = 1
+    while p_r <= p:
+        p_c = p // p_r
+        cb = hybrid_epoch_cost(st.m, st.n, st.zbar, HybridConfig(p_r, p_c, 4, 32, 10), PERLMUTTER)
+        costs[(p_r, p_c)] = cb.total
+        if best is None or cb.total < costs[best]:
+            best = (p_r, p_c)
+        p_r *= 2
+    rule = topology_rule(p, st.n, PERLMUTTER)
+    ratio = costs[rule] / costs[best]
+    emit(
+        "table4/sweep/url",
+        costs[best] * 1e6,
+        f"sweep_best={best};rule={rule};rule_over_best={ratio:.3f}",
+    )
+
+    # TPU retarget: the rule keeps the frequent axis inside one pod
+    for name in ("url", "news20"):
+        st = DATASET_STATS[name]
+        got = topology_rule(512, st.n, TPU_V5E)
+        emit(f"table4/tpu-rule/{name}", 0.0, f"mesh={got};domain={TPU_V5E.ranks_per_domain}")

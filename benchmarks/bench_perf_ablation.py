@@ -1,0 +1,63 @@
+"""§Perf ablation — reproduce the hillclimb effects on reduced-depth
+compiles (fast enough for the bench driver; the full-depth numbers are
+in EXPERIMENTS.md §Perf and results/dryrun/).
+
+Runs in a subprocess so the 512-device XLA flag never leaks into the
+bench process.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit
+
+REPO = Path(__file__).resolve().parent.parent
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, json, jax
+import repro.configs as C
+from repro.launch.dryrun import lower_step, _cost_and_collectives
+from repro.launch.input_specs import SHAPES, resolve_config
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh()
+shape = SHAPES["train_4k"]
+out = {}
+for prof in ("tp", "dp"):
+    cfg = dataclasses.replace(resolve_config("gemma-2b", shape),
+                              sharding_profile=prof, n_layers=2)
+    with jax.sharding.set_mesh(mesh):
+        f, b, coll = _cost_and_collectives(cfg, shape, mesh, 2)
+    out[prof] = {"flops": f, "bytes": b, "coll": coll.total_bytes}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def run() -> None:
+    env = {
+        "PYTHONPATH": str(REPO / "src"),
+        "PATH": "/usr/bin:/bin:/usr/local/bin",
+        "JAX_PLATFORMS": "cpu",
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, env=env, timeout=900
+    )
+    if proc.returncode != 0:
+        emit("perf-ablation/error", 0.0, proc.stderr.splitlines()[-1][:100] if proc.stderr else "?")
+        return
+    line = next(l for l in proc.stdout.splitlines() if l.startswith("RESULT "))
+    res = json.loads(line[len("RESULT "):])
+    for prof, v in res.items():
+        emit(
+            f"perf-ablation/gemma-train-2L/{prof}",
+            v["coll"] / 50e9 * 1e6,  # collective term µs
+            f"flops={v['flops']:.3g};coll_bytes={v['coll']:.3g}",
+        )
+    ratio = res["tp"]["coll"] / max(res["dp"]["coll"], 1)
+    emit("perf-ablation/gemma-train-2L/dp-win", 0.0, f"collective_ratio_tp_over_dp={ratio:.1f}x")

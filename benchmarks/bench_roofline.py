@@ -1,0 +1,42 @@
+"""§Roofline — aggregate the dry-run results into the per-(arch × shape
+× mesh) three-term table. Reads results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``); emits one CSV row per combination.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def run() -> None:
+    if not RESULTS.exists():
+        emit("roofline/missing", 0.0, "run `python -m repro.launch.dryrun` first")
+        return
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(f.read_text())
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh'].split(':')[0]}"
+        if rec.get("status") == "skipped":
+            emit(f"roofline/{tag}", 0.0, f"SKIPPED:{rec['reason'][:60]}")
+            continue
+        if rec.get("status") != "ok":
+            emit(f"roofline/{tag}", 0.0, f"FAILED:{rec.get('error', '')[:80]}")
+            continue
+        mem = rec.get("memory", {})
+        peak = mem.get("peak_bytes", 0) / 1e9
+        r = rec.get("roofline")
+        if r is None:
+            emit(f"roofline/{tag}", 0.0, f"peak_gb={peak:.2f};memory-only")
+            continue
+        emit(
+            f"roofline/{tag}",
+            r["compute_s"] * 1e6,
+            f"memory_us={r['memory_s'] * 1e6:.0f};collective_us={r['collective_s'] * 1e6:.0f};"
+            f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};peak_gb={peak:.2f}",
+        )
+        rows.append(r)

@@ -1,0 +1,102 @@
+"""Paper Table 11 + Figure 6 — time-to-target-loss across solvers.
+
+On this single CPU the wall-clock of the *simulated-rank* solvers
+reflects compute only (communication is free on one device), so the
+measured speedups are sample-efficiency + compute effects; the
+cluster-level claim (53× on url etc.) is carried by the cost model
+(bench_costmodel) — both are reported, clearly labeled.
+
+Solvers run at each one's paper-style configuration on url-sm (sparse,
+high-dimensional, column-skewed — HybridSGD's home regime) and
+epsilon-sm (dense — FedAvg's home regime).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    full_loss,
+    global_problem,
+    make_problem,
+    run_fedavg,
+    run_hybrid_sgd,
+    run_sstep_sgd,
+    stack_row_teams,
+)
+from repro.sparse.synthetic import make_dataset
+
+ETA = 1.0
+
+
+def _time_to_target(run_traced, target: float, max_rounds: int = 60):
+    """One timed run with a per-round loss trace; time-to-target =
+    (first crossing round / max_rounds) × total wall. Single
+    compilation, correct cyclic sample sequence."""
+    t0 = time.perf_counter()
+    losses = np.asarray(run_traced(max_rounds))
+    total = time.perf_counter() - t0
+    hit = np.nonzero(losses <= target)[0]
+    if len(hit):
+        r = int(hit[0]) + 1
+        return total * r / max_rounds, r, float(losses[hit[0]])
+    return total, max_rounds, float(losses[-1])
+
+
+def run() -> None:
+    # targets calibrated to the slower solver's 60-round terminal loss
+    # (the paper's own calibration protocol, §7.5)
+    for ds_name, target in (("url-sm", 0.675), ("epsilon-sm", 0.54)):
+        ds = make_dataset(ds_name, seed=0)
+        s, b, tau = 4, 16, 16
+        p_r_hybrid = 2
+        p_fed = 8
+
+        # FedAvg at p=8
+        tp_f = stack_row_teams(ds.A, ds.y, p_fed, row_multiple=b)
+        gp_f = global_problem(tp_f)
+        x0 = jnp.zeros(ds.A.n)
+
+        def fed_run(R, _tp=tp_f, _x0=x0):
+            return run_fedavg(_tp, _x0, b, ETA, tau, rounds=R, loss_every=1)[1]
+
+        t_f, r_f, l_f = _time_to_target(fed_run, target)
+        emit(f"table11/{ds_name}/fedavg", t_f * 1e6, f"rounds={r_f};loss={l_f:.4f}")
+
+        # HybridSGD at p_r=2
+        tp_h = stack_row_teams(ds.A, ds.y, p_r_hybrid, row_multiple=s * b)
+        gp_h = global_problem(tp_h)
+
+        def hyb_run(R, _tp=tp_h, _x0=x0):
+            return run_hybrid_sgd(_tp, _x0, s, b, ETA, tau, rounds=R, loss_every=1)[1]
+
+        t_h, r_h, l_h = _time_to_target(hyb_run, target)
+        emit(f"table11/{ds_name}/hybrid", t_h * 1e6, f"rounds={r_h};loss={l_h:.4f}")
+
+        # 1D s-step (p_r=1 corner)
+        prob = make_problem(ds.A, ds.y, row_multiple=s * b)
+
+        def ss_run(R, _p=prob, _x0=x0):
+            return run_sstep_sgd(_p, _x0, s, b, ETA, R * tau, loss_every=tau)[1]
+
+        t_s, r_s, l_s = _time_to_target(ss_run, target)
+        emit(f"table11/{ds_name}/sstep1d", t_s * 1e6, f"rounds={r_s};loss={l_s:.4f}")
+
+        speedup = t_f / max(t_h, 1e-9)
+        # On one CPU, hybrid's wall is dominated by the densified Gram
+        # scatter (the production path is the Pallas BSR kernel and, on
+        # a cluster, communication dominates — the 183× per-sample
+        # model prediction in table11-model carries the cluster claim).
+        # The *sample-efficiency* comparison (rounds to equal loss) is
+        # the machine-independent part measured here.
+        emit(
+            f"table11/{ds_name}/speedup-hybrid-over-fedavg",
+            0.0,
+            f"cpu_wall={speedup:.2f}x;rounds_fed={r_f};rounds_hyb={r_h};"
+            f"regime={'hybrid-favored-on-cluster' if 'url' in ds_name else 'fedavg-favored'}",
+        )

@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable[[], object], repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (blocks on jax arrays)."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r) if r is not None else None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        if r is not None:
+            jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")

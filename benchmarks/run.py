@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table9,...]
+
+Every row is ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = {
+    "table4": "benchmarks.bench_mesh_rule",
+    "table5+7+fig4": "benchmarks.bench_costmodel",
+    "table9": "benchmarks.bench_partitioners",
+    "table11": "benchmarks.bench_time_to_loss",
+    "fig3": "benchmarks.bench_skew_sweep",
+    "fig5": "benchmarks.bench_mesh_sweep",
+    "kernels": "benchmarks.bench_kernels",
+    "perf-ablation": "benchmarks.bench_perf_ablation",
+    "roofline": "benchmarks.bench_roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else list(MODULES)
+
+    import importlib
+
+    failures = []
+    for key in selected:
+        mod_name = MODULES[key]
+        print(f"# ==== {key} ({mod_name}) ====", flush=True)
+        try:
+            importlib.import_module(mod_name).run()
+        except Exception:
+            failures.append(key)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Mesh auto-tuning demo: the paper's §6 selection flow as a tool.
+
+Given (dataset stats, machine, processor count), produce the full
+recommendation: mesh split (topology rule), (s, b, τ) (Eq. 4 ranking),
+partitioner (refined model ranking), and operating regime.
+
+    PYTHONPATH=src python examples/mesh_autotune.py --n 3231961 --m 2396130 --zbar 116 --p 256
+"""
+
+import argparse
+
+from repro.costmodel import (
+    MACHINES,
+    PERLMUTTER,
+    PartitionerProfile,
+    classify_regime,
+    grid_search_config,
+    rank_partitioners,
+    topology_rule,
+    HybridConfig,
+)
+
+
+def recommend(m: int, n: int, zbar: float, p: int, machine, kappa_rows: float = 10.0):
+    p_r, p_c = topology_rule(p, n, machine)
+    cfg, cb = grid_search_config(m, n, zbar, p_r, p_c, machine)
+    regime = classify_regime(m, n, zbar, cfg, machine)
+    # partitioner profiles: rows gets the dataset's skew-driven κ;
+    # nnz balances κ but may blow the slab; cyclic bounds both
+    profiles = [
+        PartitionerProfile("rows", kappa_rows, -(-n // p_c)),
+        PartitionerProfile("nnz", 1.1, min(4 * -(-n // p_c), n)),
+        PartitionerProfile("cyclic", 1.5, -(-n // p_c)),
+    ]
+    ranked = rank_partitioners(n, zbar, profiles, p_r, p_c, cfg.s, cfg.b, cfg.tau, machine)
+    return {
+        "mesh": (p_r, p_c),
+        "config": cfg,
+        "regime": regime.name,
+        "balance": regime.balance,
+        "partitioner": ranked[0][0],
+        "ranking": [nm for nm, _ in ranked],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=2_396_130)
+    ap.add_argument("--n", type=int, default=3_231_961)
+    ap.add_argument("--zbar", type=float, default=116)
+    ap.add_argument("--p", type=int, default=256)
+    ap.add_argument("--kappa-rows", type=float, default=33.8)
+    args = ap.parse_args()
+
+    for name, machine in MACHINES.items():
+        r = recommend(args.m, args.n, args.zbar, args.p, machine, args.kappa_rows)
+        cfg: HybridConfig = r["config"]
+        print(f"{name}:")
+        print(f"  mesh p_r×p_c      = {r['mesh'][0]}×{r['mesh'][1]}")
+        print(f"  s, b, τ           = {cfg.s}, {cfg.b}, {cfg.tau}")
+        print(f"  regime            = {r['regime']} (balance {r['balance']:.2f})")
+        print(f"  partitioner       = {r['partitioner']}  (ranked {'>'.join(r['ranking'])})")
+
+
+if __name__ == "__main__":
+    main()

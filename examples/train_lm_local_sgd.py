@@ -1,0 +1,79 @@
+"""Hybrid-2D LM training demo: the paper's technique on a transformer.
+
+Spawns 8 placeholder devices, builds a (2, 2, 2) = (pod, data, model)
+mesh, and trains a small gemma-family model with pod-local steps and a
+τ-deferred parameter sync (the HybridSGD schedule at pod scale —
+DESIGN.md §2). Compares against fully-synchronous training on the same
+data to show the τ trade-off.
+
+    PYTHONPATH=src python examples/train_lm_local_sgd.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models.init import init_params
+from repro.models.transformer import lm_loss
+from repro.optim.hybrid2d import make_hybrid_train_step, make_sync_step, stack_for_pods
+from repro.optim.sgd import adamw
+from repro.train.data import MarkovTextStream
+
+STEPS, TAU, BATCH, SEQ = 60, 5, 8, 64
+
+
+def run(mesh, tau: int, label: str) -> list[float]:
+    cfg = reduced(get_config("gemma-2b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    opt = adamw(3e-4)
+    opt_state = opt.init(params)
+    n_pods = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("pod", 1)
+
+    def loss_fn(p, tokens, targets):
+        return lm_loss(cfg, p, tokens, targets)
+
+    step = make_hybrid_train_step(mesh, loss_fn, opt)
+    sync = make_sync_step(mesh)
+    if n_pods > 1:
+        params = stack_for_pods(params, n_pods)
+        opt_state = stack_for_pods(opt_state, n_pods)
+    state = (params, opt_state)
+
+    stream = MarkovTextStream(cfg.vocab_size, seed=1)
+    it = stream.batches(BATCH, SEQ)
+    losses = []
+    for s in range(STEPS):
+        tokens, targets = next(it)
+        state, loss = step(state, (jnp.asarray(tokens), jnp.asarray(targets)))
+        if n_pods > 1 and (s + 1) % tau == 0:
+            p, st_ = state
+            state = (sync(p), st_)
+        if (s + 1) % 10 == 0:
+            losses.append(float(loss))
+    print(f"  {label:24s} losses: " + " ".join(f"{l:.3f}" for l in losses))
+    return losses
+
+
+def main() -> None:
+    print(f"devices: {len(jax.devices())}")
+    mesh_hybrid = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh_sync = jax.make_mesh((4, 2), ("data", "model"),
+                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"hybrid-2D (2 pods, τ={TAU}) vs fully-synchronous, same data:")
+    with jax.sharding.set_mesh(mesh_hybrid):
+        l_h = run(mesh_hybrid, TAU, f"hybrid 2x2x2 tau={TAU}")
+    with jax.sharding.set_mesh(mesh_sync):
+        l_s = run(mesh_sync, 1, "synchronous 4x2")
+    gap = l_h[-1] - l_s[-1]
+    print(f"final-loss gap (hybrid − sync) = {gap:+.4f} — the τ-drift cost the "
+          f"paper's convergence analysis bounds (Stich), bought with 1/{TAU} of "
+          f"the cross-pod sync traffic.")
+
+
+if __name__ == "__main__":
+    main()

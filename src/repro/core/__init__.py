@@ -1,0 +1,49 @@
+"""The paper's contribution: HybridSGD and its 1D baselines, in JAX.
+
+Solver family (all solve the same convex logistic-regression objective):
+
+  run_sgd              Algorithm 1 — sequential mini-batch SGD
+  run_sstep_sgd        Algorithm 3 — s-step (communication-avoiding) SGD
+  run_fedavg           Algorithm 2 — FedAvg / local SGD
+  run_hybrid_sgd       HybridSGD, exact simulated-rank semantics
+  run_hybrid_distributed  HybridSGD under shard_map on a 2D device mesh
+
+Corner identities (tested): hybrid(p_r=1) ≡ s-step; hybrid(p_r=p, s=1)
+≡ FedAvg; s-step(s=1) ≡ SGD; fedavg(τ=1) ≡ synchronous MB-SGD.
+"""
+
+from repro.core.problem import LogisticProblem, full_loss, make_problem, sigmoid_residual
+from repro.core.sgd import run_sgd, sgd_step
+from repro.core.sstep import run_sstep_sgd
+from repro.core.teams import TeamProblem, global_problem, stack_row_teams
+from repro.core.fedavg import run_fedavg
+from repro.core.hybrid import run_hybrid_sgd
+from repro.core.distributed import (
+    Hybrid2DProblem,
+    build_2d_problem,
+    gather_x,
+    make_hybrid_step,
+    run_hybrid_distributed,
+    scatter_x,
+)
+
+__all__ = [
+    "LogisticProblem",
+    "full_loss",
+    "make_problem",
+    "sigmoid_residual",
+    "run_sgd",
+    "sgd_step",
+    "run_sstep_sgd",
+    "TeamProblem",
+    "global_problem",
+    "stack_row_teams",
+    "run_fedavg",
+    "run_hybrid_sgd",
+    "Hybrid2DProblem",
+    "build_2d_problem",
+    "gather_x",
+    "make_hybrid_step",
+    "run_hybrid_distributed",
+    "scatter_x",
+]

@@ -1,0 +1,81 @@
+"""The optimization problem (paper §3): unregularized logistic regression.
+
+    min_x f(x) = (1/m) Σ_i log(1 + exp(-y_i · a_i x))
+
+diag(y)·A is precomputed once (the paper does the same), so the gradient
+at a sampled row set S is  g = -(1/b) (S·diag(y)A)^T u  with
+u = sigmoid(-S·diag(y)A·x) = 1/(1+exp(S·diag(y)A·x)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+from repro.sparse.ell import EllBlock, ell_from_csr
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LogisticProblem:
+    """diag(y)·A in padded-ELL layout + metadata.
+
+    ``rows_valid`` masks padded (all-zero) rows out of the loss; padded
+    rows contribute zero gradient automatically (zero A-row).
+    """
+
+    ya: EllBlock  # diag(y)·A, possibly row-padded
+    rows_valid: jnp.ndarray  # (padded_m,) bool
+    m: int = dataclasses.field(metadata=dict(static=True))  # true sample count
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def padded_m(self) -> int:
+        return self.ya.rows
+
+
+def pad_rows_to(a: CSRMatrix, multiple: int) -> int:
+    return -(-a.m // multiple) * multiple
+
+
+def make_problem(
+    a: CSRMatrix, y: np.ndarray, row_multiple: int = 1, dtype=jnp.float32,
+    ell_width: int | None = None,
+) -> LogisticProblem:
+    """Build the device problem. Rows are padded to ``row_multiple`` (the
+    paper pads m ≡ 0 mod s_max·b so cyclic batches never wrap)."""
+    ya_csr = a.scale_rows(y)
+    padded_m = pad_rows_to(a, row_multiple)
+    ell = ell_from_csr(ya_csr, width=ell_width, dtype=dtype)
+    if padded_m > a.m:
+        pad = padded_m - a.m
+        ell = EllBlock(
+            indices=jnp.concatenate([ell.indices, jnp.zeros((pad, ell.width), jnp.int32)]),
+            values=jnp.concatenate([ell.values, jnp.zeros((pad, ell.width), ell.values.dtype)]),
+            n=ell.n,
+        )
+    valid = jnp.arange(padded_m) < a.m
+    return LogisticProblem(ya=ell, m=a.m, n=a.n, rows_valid=valid)
+
+
+def sigmoid_residual(z: jnp.ndarray) -> jnp.ndarray:
+    """u = 1/(1+exp(z)), computed stably for large |z|."""
+    return jnp.where(z >= 0, jnp.exp(-z) / (1 + jnp.exp(-z)), 1 / (1 + jnp.exp(z)))
+
+
+def full_loss(problem: LogisticProblem, x: jnp.ndarray) -> jnp.ndarray:
+    """f(x) over all m samples. log(1+exp(z)) with z = y·a·x sign folded
+    into ya (so the loss argument is -z_row of ya·x ... note ya = diag(y)A
+    ⇒ margin = (ya x) and loss = log(1+exp(-margin))."""
+    from repro.sparse.ell import ell_matvec
+
+    margin = ell_matvec(problem.ya, x)
+    # stable log1p(exp(-margin))
+    losses = jnp.logaddexp(0.0, -margin)
+    losses = jnp.where(problem.rows_valid, losses, 0.0)
+    return jnp.sum(losses) / problem.m

@@ -1,0 +1,67 @@
+"""Algorithm 1 — mini-batch SGD (the sequential baseline).
+
+Row sub-sampling is cyclic, i = (i + b) mod m, exactly as the paper
+(§5): it makes the sample sequence reproducible across solvers so the
+s-step ≡ SGD identity can be tested to floating-point error.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import LogisticProblem, full_loss, sigmoid_residual
+from repro.sparse.ell import EllBlock, ell_matvec, ell_rmatvec
+
+
+def batch_rows(ell: EllBlock, k: jnp.ndarray, b: int) -> EllBlock:
+    """Rows [k·b mod m, +b) — static size b, dynamic start."""
+    m = ell.rows
+    start = (k * b) % m
+    idx = jax.lax.dynamic_slice_in_dim(ell.indices, start, b, axis=0)
+    val = jax.lax.dynamic_slice_in_dim(ell.values, start, b, axis=0)
+    return EllBlock(indices=idx, values=val, n=ell.n)
+
+
+def sgd_step(ell: EllBlock, x: jnp.ndarray, k: jnp.ndarray, b: int, eta: float) -> jnp.ndarray:
+    """One mini-batch SGD step (Algorithm 1 lines 3-6)."""
+    batch = batch_rows(ell, k, b)
+    z = ell_matvec(batch, x)  # S·diag(y)·A·x
+    u = sigmoid_residual(z)  # 1/(1+exp(z))
+    # g = -(1/b) (S diag(y) A)^T u  ⇒  x ← x + (η/b) Yᵀu
+    return x + (eta / b) * ell_rmatvec(batch, u)
+
+
+@partial(jax.jit, static_argnames=("b", "K", "loss_every"))
+def run_sgd(
+    problem: LogisticProblem,
+    x0: jnp.ndarray,
+    b: int,
+    eta: float,
+    K: int,
+    loss_every: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x_K, losses) where losses is the full objective sampled
+    every ``loss_every`` iterations (empty if 0)."""
+    ell = problem.ya
+    if ell.rows % b:
+        raise ValueError(f"padded m={ell.rows} must be divisible by b={b}")
+
+    chunk = loss_every if loss_every else K
+    n_chunks, rem = divmod(K, chunk)
+    if rem:
+        raise ValueError(f"K={K} must be divisible by loss_every={loss_every}")
+
+    def inner(x, k):
+        return sgd_step(ell, x, k, b, eta), None
+
+    def outer(x, c):
+        x, _ = jax.lax.scan(inner, x, c * chunk + jnp.arange(chunk))
+        return x, full_loss(problem, x)
+
+    x, losses = jax.lax.scan(outer, x0, jnp.arange(n_chunks))
+    if not loss_every:
+        losses = jnp.zeros((0,), losses.dtype)
+    return x, losses

@@ -1,0 +1,85 @@
+"""Row-team stacking: partition (A, y) into p row blocks with uniform
+padded shapes and stack them along a leading axis.
+
+The simulated-rank implementations (FedAvg, HybridSGD) vmap the local
+solver over this axis — giving *exact* SPMD semantics on one device.
+All teams share one ELL width and one padded row count (SPMD uniformity;
+this is where nnz imbalance κ becomes padded compute, DESIGN.md §5.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import LogisticProblem
+from repro.sparse.csr import CSRMatrix
+from repro.sparse.ell import EllBlock
+from repro.sparse.partition import partition_rows
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TeamProblem:
+    """p stacked local problems. indices/values: (p, rows_local, width)."""
+
+    indices: jnp.ndarray
+    values: jnp.ndarray
+    rows_valid: jnp.ndarray  # (p, rows_local) bool
+    p: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))  # global true samples
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def rows_local(self) -> int:
+        return int(self.indices.shape[1])
+
+    def team_ell(self, i: int) -> EllBlock:
+        return EllBlock(indices=self.indices[i], values=self.values[i], n=self.n)
+
+
+def stack_row_teams(
+    a: CSRMatrix, y: np.ndarray, p: int, row_multiple: int = 1, dtype=jnp.float32
+) -> TeamProblem:
+    ya = a.scale_rows(np.asarray(y, dtype=np.float64))
+    rb = partition_rows(a.m, p)
+    blocks = [ya.row_block(int(rb[i]), int(rb[i + 1])) for i in range(p)]
+    width = max(max((int(blk.nnz_per_row.max()) if blk.m and blk.nnz else 1) for blk in blocks), 1)
+    rows_local = max(int(rb[i + 1] - rb[i]) for i in range(p))
+    rows_local = -(-rows_local // row_multiple) * row_multiple
+
+    idx = np.zeros((p, rows_local, width), dtype=np.int32)
+    val = np.zeros((p, rows_local, width), dtype=np.float64)
+    valid = np.zeros((p, rows_local), dtype=bool)
+    for i, blk in enumerate(blocks):
+        for r in range(blk.m):
+            lo, hi = int(blk.indptr[r]), int(blk.indptr[r + 1])
+            k = hi - lo
+            idx[i, r, :k] = blk.indices[lo:hi]
+            val[i, r, :k] = blk.data[lo:hi]
+        valid[i, : blk.m] = True
+    return TeamProblem(
+        indices=jnp.asarray(idx),
+        values=jnp.asarray(val, dtype=dtype),
+        rows_valid=jnp.asarray(valid),
+        p=p,
+        m=a.m,
+        n=a.n,
+    )
+
+
+def global_problem(tp: TeamProblem) -> LogisticProblem:
+    """Flatten the stacked teams back into one LogisticProblem (for the
+    full-objective trace)."""
+    flat_idx = tp.indices.reshape(-1, tp.indices.shape[-1])
+    flat_val = tp.values.reshape(-1, tp.values.shape[-1])
+    return LogisticProblem(
+        ya=EllBlock(indices=flat_idx, values=flat_val, n=tp.n),
+        m=tp.m,
+        n=tp.n,
+        rows_valid=tp.rows_valid.reshape(-1),
+    )

@@ -1,0 +1,175 @@
+"""Closed-form α-β-γ cost model (paper §6, Tables 2-3, Eq. 4).
+
+Eq. (4) per-epoch wall time of HybridSGD on a p_r × p_c mesh:
+
+  T = (m/p)(6z̄ + 2sb)γ                                 [compute]
+    + m · 2α(τ·log p_c + log p_r)/(sbτ)                  [latency]
+    + m · (s-1)b·w·β/2                                   [Gram BW]
+    + m · n·w·β/(sbτ·p_c)                                [sync BW]
+
+The 1D baselines are exact limits: (p_r=1, p_c=p, τ→∞) → 1D s-step SGD;
+(p_r=p, p_c=1, s=1) → FedAvg; additionally τ=1 → MB-SGD.
+
+β is rank-aware (§6.5): the row-team (Gram) Allreduce spans p_c ranks,
+the column (weight-sync) Allreduce spans p_r ranks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.costmodel.machines import Machine
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """One point of the (p_r, p_c, s, b, τ) design space."""
+
+    p_r: int
+    p_c: int
+    s: int
+    b: int
+    tau: int
+
+    @property
+    def p(self) -> int:
+        return self.p_r * self.p_c
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    """Per-epoch seconds, decomposed as in Eq. (4)."""
+
+    compute: float
+    latency: float
+    gram_bw: float
+    sync_bw: float
+
+    @property
+    def total(self) -> float:
+        return self.compute + self.latency + self.gram_bw + self.sync_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute,
+            "latency": self.latency,
+            "gram_bw": self.gram_bw,
+            "sync_bw": self.sync_bw,
+        }
+        return max(terms, key=terms.get)
+
+
+def _log2(q: int) -> float:
+    return math.log2(q) if q > 1 else 0.0
+
+
+def hybrid_epoch_cost(
+    m: int,
+    n: int,
+    zbar: float,
+    cfg: HybridConfig,
+    machine: Machine,
+    gamma: float | None = None,
+    beta_row: float | None = None,
+    beta_col: float | None = None,
+) -> CostBreakdown:
+    """Eq. (4). γ defaults to the cache-aware value at the per-rank
+    weight-slab working set (n·w/p_c); β defaults to the rank-aware
+    values for each Allreduce's span."""
+    w = machine.word_bytes
+    if gamma is None:
+        gamma = machine.gamma_flop(n * w / cfg.p_c)
+    if beta_row is None:  # row-team (Gram) Allreduce spans p_c ranks
+        beta_row = machine.beta(cfg.p_c)
+    if beta_col is None:  # column (weight) Allreduce spans p_r ranks
+        beta_col = machine.beta(cfg.p_r)
+    s, b, tau, p_r, p_c, p = cfg.s, cfg.b, cfg.tau, cfg.p_r, cfg.p_c, cfg.p
+
+    compute = (m / p) * (6 * zbar + 2 * s * b) * gamma
+    alpha_row = machine.alpha(p_c)
+    alpha_col = machine.alpha(p_r)
+    latency = m * 2 * (alpha_row * tau * _log2(p_c) + alpha_col * _log2(p_r)) / (s * b * tau)
+    gram_bw = m * ((s - 1) * b / 2) * w * beta_row
+    sync_bw = m * n * w * beta_col / (s * b * tau * p_c)
+    return CostBreakdown(compute=compute, latency=latency, gram_bw=gram_bw, sync_bw=sync_bw)
+
+
+def sstep_epoch_cost(m: int, n: int, zbar: float, s: int, b: int, p: int, machine: Machine) -> CostBreakdown:
+    """1D s-step SGD limit (p_r=1, p_c=p, τ→∞): column Allreduce
+    vanishes."""
+    cfg = HybridConfig(p_r=1, p_c=p, s=s, b=b, tau=1)
+    cb = hybrid_epoch_cost(m, n, zbar, cfg, machine)
+    # remove the column-sync contributions (τ→∞ limit)
+    lat = m * 2 * machine.alpha(p) * _log2(p) / (s * b)
+    return CostBreakdown(compute=cb.compute, latency=lat, gram_bw=cb.gram_bw, sync_bw=0.0)
+
+
+def fedavg_epoch_cost(m: int, n: int, zbar: float, b: int, tau: int, p: int, machine: Machine) -> CostBreakdown:
+    """FedAvg limit (p_r=p, p_c=1, s=1): row (Gram) Allreduce vanishes."""
+    w = machine.word_bytes
+    gamma = machine.gamma_flop(n * w)
+    compute = (m / p) * (6 * zbar + 2 * b) * gamma
+    latency = m * 2 * machine.alpha(p) * _log2(p) / (b * tau)
+    sync_bw = m * n * w * machine.beta(p) / (b * tau)
+    return CostBreakdown(compute=compute, latency=latency, gram_bw=0.0, sync_bw=sync_bw)
+
+
+def mbsgd_epoch_cost(m: int, n: int, zbar: float, b: int, p: int, machine: Machine) -> CostBreakdown:
+    """Synchronous mini-batch SGD = FedAvg with τ=1."""
+    return fedavg_epoch_cost(m, n, zbar, b, 1, p, machine)
+
+
+# ---- Table 3: per-sample costs (amortized over the comm period) ----
+
+
+def per_sample_costs(
+    solver: str,
+    m: int,
+    n: int,
+    zbar: float,
+    p: int,
+    s: int,
+    b: int,
+    tau: int,
+    machine: Machine,
+    p_r: int = 1,
+    p_c: int = 1,
+) -> dict[str, float]:
+    """Latency / bandwidth / compute per sample (paper Table 3), in
+    seconds. ``solver`` ∈ {sgd, mbsgd, fedavg, sstep1d, hybrid}."""
+    w = machine.word_bytes
+    a = machine.alpha(p)
+    bt = machine.beta(p)
+    g = machine.gamma_flop(n * w / max(p_c, 1))
+    L2 = _log2
+    if solver == "sgd":
+        return {"latency": 2 * L2(p) * a, "bandwidth": w * bt, "compute": 4 * zbar * g}
+    if solver == "mbsgd":
+        return {
+            "latency": 2 * L2(p) * a / b,
+            "bandwidth": w * bt,
+            "compute": (4 * zbar + 2 * n / b) * g,
+        }
+    if solver == "fedavg":
+        return {
+            "latency": 2 * L2(p) * a / (tau * b),
+            "bandwidth": n * w * bt / (tau * b),
+            "compute": (4 * zbar + 2 * n / b) * g,
+        }
+    if solver == "sstep1d":
+        return {
+            "latency": 2 * L2(p) * a / (s * b),
+            "bandwidth": (s - 1) * b * w * bt / 2,
+            "compute": (6 * zbar + 2 * s * b) * g,
+        }
+    if solver == "hybrid":
+        a_row, a_col = machine.alpha(p_c), machine.alpha(p_r)
+        b_row, b_col = machine.beta(p_c), machine.beta(p_r)
+        return {
+            "latency": 2 * (a_row * tau * L2(p_c) + a_col * L2(p_r)) / (s * b * tau),
+            "bandwidth": ((s - 1) * b / 2) * w * b_row + n * w * b_col / (s * b * tau * p_c),
+            "compute": (6 * zbar + 2 * s * b) * g,
+        }
+    raise ValueError(f"unknown solver {solver!r}")

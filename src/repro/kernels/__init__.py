@@ -1,0 +1,32 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  bsr_matmul — block-sparse matmul, scalar-prefetched block indices
+               (the MKL-CSR SpMV, rethought for the MXU)
+  gram       — fused tril(YYᵀ) + Y·x syrk (the mkl_sparse_syrkd hot
+               spot of Algorithm 3)
+  sstep_inner — the s-step correction loop fused into one launch
+               (G, v, u stay VMEM-resident across all s steps)
+
+ops.py: jit'd wrappers (SparseLinearOp bundles A and BSR(Aᵀ));
+ref.py: pure-jnp oracles. interpret=True on CPU, =False on real TPU.
+"""
+
+from repro.kernels.ops import (
+    SparseLinearOp,
+    sparse_linear_op,
+    spmm,
+    spmv,
+    sstep_gram,
+    sstep_gram_and_v,
+)
+from repro.kernels.sstep_inner import sstep_inner
+
+__all__ = [
+    "SparseLinearOp",
+    "sparse_linear_op",
+    "spmm",
+    "spmv",
+    "sstep_gram",
+    "sstep_gram_and_v",
+    "sstep_inner",
+]

@@ -1,0 +1,87 @@
+"""Block-sparse (BSR) matmul Pallas TPU kernel — the MKL-SpMV analogue.
+
+TPU adaptation of the paper's sparse compute (DESIGN.md §2): instead of
+CSR scalar gathers (no TPU analogue), A is re-blocked into dense
+(bm × bn) tiles (repro.sparse.bsr) and each tile contracts on the MXU.
+The tile's block-column index is *scalar-prefetched*
+(pltpu.PrefetchScalarGridSpec) so the BlockSpec index_map can route the
+right x/X block into VMEM ahead of the compute — the canonical Pallas
+block-sparse pattern.
+
+Grid: (n_block_rows, max_blocks_per_row). The output block row is
+revisited along the minor grid axis j and accumulated in VMEM; padded
+tiles are all-zero so they contribute nothing (no masking needed).
+
+VMEM working set per step: bm·bn (tile) + bn·k (X block) + bm·k (Y
+block) words — BlockSpec tiling bounds the footprint exactly the way
+the paper's L_cap bounds n_local·w.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bsr_matmat_kernel(bc_ref, tiles_ref, x_ref, y_ref):
+    """One (block_row r, slot j) step: Y[r] += T[r,j] @ X[bc[r,j]]."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    # (1, 1, bm, bn) tile × (1, bn, k) X block → accumulate (1, bm, k)
+    tile = tiles_ref[0, 0]
+    xblk = x_ref[0]
+    y_ref[0, ...] += jnp.dot(tile, xblk, preferred_element_type=y_ref.dtype)
+
+
+def bsr_matmat(
+    tiles: jnp.ndarray,  # (n_brows, max_blocks, bm, bn)
+    block_cols: jnp.ndarray,  # (n_brows, max_blocks) int32
+    x: jnp.ndarray,  # (n_pad, k)
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Y = A @ X on padded shapes; returns (n_brows·bm, k)."""
+    n_brows, max_blocks, bm, bn = tiles.shape
+    n_pad, k = x.shape
+    assert n_pad % bn == 0, (n_pad, bn)
+    x_blocked = x.reshape(n_pad // bn, bn, k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_brows, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bn), lambda r, j, bc: (r, j, 0, 0)),
+            pl.BlockSpec((1, bn, k), lambda r, j, bc: (bc[r, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, k), lambda r, j, bc: (r, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _bsr_matmat_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_brows, bm, k), x.dtype),
+        interpret=interpret,
+    )(block_cols, tiles, x_blocked)
+    return out.reshape(n_brows * bm, k)
+
+
+def bsr_matvec(tiles, block_cols, x, *, interpret: bool = True) -> jnp.ndarray:
+    """y = A @ x via the matmat kernel with k=1 (TPU lane-padded)."""
+    return bsr_matmat(tiles, block_cols, x[:, None], interpret=interpret)[:, 0]
+
+
+# ---- transpose product: g = Aᵀ @ u (the SGD gradient) ----
+#
+# A scatter-accumulate kernel (output block routed by bc[r, j]) is
+# unsafe in Pallas: an output block's VMEM buffer is undefined when
+# revisited after the grid has moved away. The TPU-native answer is
+# layout, not scatter: the host pre-builds BSR(Aᵀ) (a BSC view of A) and
+# the *forward* kernel runs on it — every output block is then produced
+# by consecutive grid steps. See repro.kernels.ops.SparseLinearOp.

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for the s-step Gram matrix  G = tril(Y Yᵀ, -1).
+
+This is the MKL ``mkl_sparse_syrkd`` hot spot of Algorithm 3: Y is the
+(sb × n_local) bundle of sampled rows; G's strictly-lower blocks correct
+the deferred updates. sb is small (≤ a few hundred) while n_local is
+large, so the kernel streams Y through VMEM in (sb × bk) column panels
+and accumulates the (sb × sb) Gram block on the MXU — a classic
+rank-k-update (syrk) tiling. The strict-lower mask is applied on the
+final panel.
+
+VMEM: sb·bk (panel) + sb·sb (accumulator) words; bk chosen so both fit
+comfortably (default 512 lanes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(y_ref, g_ref, *, n_panels: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    panel = y_ref[...]  # (sb, bk)
+    g_ref[...] += jnp.dot(panel, panel.T, preferred_element_type=g_ref.dtype)
+
+    @pl.when(k == n_panels - 1)
+    def _mask():
+        sb = g_ref.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (sb, sb), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (sb, sb), 1)
+        g_ref[...] = jnp.where(row > col, g_ref[...], 0.0)
+
+
+def gram_tril(y: jnp.ndarray, *, bk: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """G = tril(Y Yᵀ, -1) for Y: (sb, n). n is zero-padded to bk.
+
+    Accumulates in float32 (MXU-faithful) regardless of input dtype."""
+    sb, n = y.shape
+    n_pad = -(-n // bk) * bk
+    if n_pad != n:
+        y = jnp.pad(y, ((0, 0), (0, n_pad - n)))
+    n_panels = n_pad // bk
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, n_panels=n_panels),
+        grid=(n_panels,),
+        in_specs=[pl.BlockSpec((sb, bk), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((sb, sb), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((sb, sb), jnp.float32),
+        interpret=interpret,
+    )(y)
+
+
+def _gram_and_v_kernel(y_ref, x_ref, g_ref, v_ref, *, n_panels: int):
+    """Fused: G = tril(YYᵀ,-1) and v = Y·x in one pass over Y panels —
+    halves HBM traffic for the bundle (the dominant stream)."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    panel = y_ref[...]  # (sb, bk)
+    xblk = x_ref[...]  # (bk, 1)
+    g_ref[...] += jnp.dot(panel, panel.T, preferred_element_type=g_ref.dtype)
+    v_ref[...] += jnp.dot(panel, xblk, preferred_element_type=v_ref.dtype)
+
+    @pl.when(k == n_panels - 1)
+    def _mask():
+        sb = g_ref.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (sb, sb), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (sb, sb), 1)
+        g_ref[...] = jnp.where(row > col, g_ref[...], 0.0)
+
+
+def gram_and_v(
+    y: jnp.ndarray, x: jnp.ndarray, *, bk: int = 512, interpret: bool = True
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(tril(YYᵀ,-1), Y·x) fused. x: (n,)."""
+    sb, n = y.shape
+    n_pad = -(-n // bk) * bk
+    if n_pad != n:
+        y = jnp.pad(y, ((0, 0), (0, n_pad - n)))
+        x = jnp.pad(x, (0, n_pad - n))
+    n_panels = n_pad // bk
+    import functools
+
+    g, v = pl.pallas_call(
+        functools.partial(_gram_and_v_kernel, n_panels=n_panels),
+        grid=(n_panels,),
+        in_specs=[
+            pl.BlockSpec((sb, bk), lambda k: (0, k)),
+            pl.BlockSpec((bk, 1), lambda k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((sb, sb), lambda k: (0, 0)),
+            pl.BlockSpec((sb, 1), lambda k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sb, sb), jnp.float32),
+            jax.ShapeDtypeStruct((sb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, x[:, None])
+    return g, v[:, 0]

@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True: this container is CPU-only, so kernels
+execute their Python bodies (functionally identical to the TPU
+lowering); on real TPU hardware pass interpret=False.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bsr_matmul import bsr_matmat, bsr_matvec
+from repro.kernels.gram import gram_and_v, gram_tril
+from repro.sparse.bsr import BsrMatrix, bsr_from_csr
+from repro.sparse.csr import CSRMatrix, csr_transpose
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def spmm(tiles, block_cols, x, interpret: bool = True):
+    """Y = A @ X (block-sparse × dense)."""
+    return bsr_matmat(tiles, block_cols, x, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def spmv(tiles, block_cols, x, interpret: bool = True):
+    return bsr_matvec(tiles, block_cols, x, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bk", "interpret"))
+def sstep_gram(y, bk: int = 512, interpret: bool = True):
+    """G = tril(YYᵀ, -1) — Algorithm 3's syrk hot spot."""
+    return gram_tril(y, bk=bk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bk", "interpret"))
+def sstep_gram_and_v(y, x, bk: int = 512, interpret: bool = True):
+    """Fused (G, v) — one pass over the bundle panels."""
+    return gram_and_v(y, x, bk=bk, interpret=interpret)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SparseLinearOp:
+    """A and Aᵀ as BSR tile sets, ready for the forward kernel.
+
+    Transpose products run the forward kernel on BSR(Aᵀ) — the
+    TPU-native answer to CSR's transpose-SpMV scatter (see
+    bsr_matmul.py). Padded logical sizes are kept for truncation.
+    """
+
+    tiles: jnp.ndarray
+    block_cols: jnp.ndarray
+    t_tiles: jnp.ndarray
+    t_block_cols: jnp.ndarray
+    m: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    fwd_in: int = dataclasses.field(metadata=dict(static=True))  # padded n for A
+    bwd_in: int = dataclasses.field(metadata=dict(static=True))  # padded m for Aᵀ
+
+    def matvec(self, x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+        x_pad = jnp.zeros(self.fwd_in, x.dtype).at[: self.n].set(x)
+        return spmv(self.tiles, self.block_cols, x_pad, interpret=interpret)[: self.m]
+
+    def rmatvec(self, u: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+        u_pad = jnp.zeros(self.bwd_in, u.dtype).at[: self.m].set(u)
+        return spmv(self.t_tiles, self.t_block_cols, u_pad, interpret=interpret)[: self.n]
+
+    def matmat(self, x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+        x_pad = jnp.zeros((self.fwd_in, x.shape[1]), x.dtype).at[: self.n].set(x)
+        return spmm(self.tiles, self.block_cols, x_pad, interpret=interpret)[: self.m]
+
+    def rmatmat(self, u: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+        u_pad = jnp.zeros((self.bwd_in, u.shape[1]), u.dtype).at[: self.m].set(u)
+        return spmm(self.t_tiles, self.t_block_cols, u_pad, interpret=interpret)[: self.n]
+
+
+def sparse_linear_op(
+    a: CSRMatrix, bm: int = 8, bn: int = 128, dtype=jnp.float32
+) -> SparseLinearOp:
+    fwd: BsrMatrix = bsr_from_csr(a, bm=bm, bn=bn, dtype=dtype)
+    bwd: BsrMatrix = bsr_from_csr(csr_transpose(a), bm=bm, bn=bn, dtype=dtype)
+    return SparseLinearOp(
+        tiles=fwd.tiles,
+        block_cols=fwd.block_cols,
+        t_tiles=bwd.tiles,
+        t_block_cols=bwd.block_cols,
+        m=a.m,
+        n=a.n,
+        fwd_in=fwd.shape[1],
+        bwd_in=bwd.shape[1],
+    )

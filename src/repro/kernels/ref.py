@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bsr_matmat_ref(tiles, block_cols, x) -> jnp.ndarray:
+    """Y = A @ X via dense gather-einsum on the blocked layout."""
+    n_brows, max_blocks, bm, bn = tiles.shape
+    k = x.shape[1]
+    x_blocked = x.reshape(-1, bn, k)
+    gathered = jnp.take(x_blocked, block_cols, axis=0)  # (nbr, maxb, bn, k)
+    y = jnp.einsum("rjab,rjbk->rak", tiles, gathered)
+    return y.reshape(n_brows * bm, k)
+
+
+def bsr_matvec_ref(tiles, block_cols, x) -> jnp.ndarray:
+    return bsr_matmat_ref(tiles, block_cols, x[:, None])[:, 0]
+
+
+def gram_tril_ref(y) -> jnp.ndarray:
+    """G = tril(Y Yᵀ, -1), f32 accumulation (matches the kernel)."""
+    return jnp.tril(jnp.dot(y, y.T, preferred_element_type=jnp.float32), k=-1)
+
+
+def gram_and_v_ref(y, x) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return (
+        jnp.tril(jnp.dot(y, y.T, preferred_element_type=jnp.float32), k=-1),
+        jnp.dot(y, x, preferred_element_type=jnp.float32),
+    )

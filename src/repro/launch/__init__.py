@@ -1,0 +1,9 @@
+"""Launch layer: meshes, dry-run, roofline, train/serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in
+a dedicated process (the __main__ entry), never from library code.
+"""
+
+from repro.launch.mesh import device_count_needed, make_mesh, make_production_mesh
+
+__all__ = ["device_count_needed", "make_mesh", "make_production_mesh"]

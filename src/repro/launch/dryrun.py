@@ -1,0 +1,246 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) this lowers + compiles
+the real step function against ShapeDtypeStruct stand-ins on 512
+placeholder host devices, proving the distribution config is coherent:
+sharding mismatches, compile-time OOM, and unsupported collectives all
+fail here.
+
+Per combination it records:
+  * memory_analysis of the FULL-depth scanned compile (fits-per-device
+    proof),
+  * cost_analysis + HLO collective bytes of depth-1/2 unrolled variants
+    extrapolated to full depth (roofline terms — see roofline.py for
+    why unrolled: XLA counts a while body once).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+      --shape train_4k --mesh single                              # one combo
+  ... --skip-roofline                                             # memory only
+Results accumulate in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY
+from repro.launch import roofline as rl
+from repro.launch.input_specs import (
+    SHAPES,
+    cache_shape,
+    cache_shardings,
+    params_shape,
+    params_shardings,
+    resolve_config,
+    shape_applicable,
+    token_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    make_pod_sync_step,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mesh_label(mesh) -> str:
+    return "x".join(str(s) for s in mesh.axis_sizes) + ":" + ",".join(mesh.axis_names)
+
+
+def lower_step(cfg, shape, mesh, *, unroll: bool, opt=None, single_microbatch: bool = False):
+    """Lower the appropriate step for (cfg, shape) on mesh.
+
+    ``single_microbatch``: collapse the gradient-accumulation scan to
+    M=1 so cost_analysis counts the whole batch (roofline lowerings;
+    XLA counts a while body once — see roofline.py)."""
+    structs, shardings = token_specs(cfg, shape, mesh)
+    pshape = params_shape(cfg)
+    pshard = params_shardings(cfg, mesh, pshape)
+
+    if shape.kind == "train":
+        from repro.launch.steps import data_parallel_size
+        from repro.models.init import param_pspecs
+
+        mps = max(shape.global_batch // data_parallel_size(mesh), 1) if single_microbatch else 1
+        # ≥100B params: bf16 gradient accumulation (§Perf-3)
+        gdt = jnp.bfloat16 if cfg.param_count() > 100e9 else jnp.float32
+        step = make_train_step(cfg, mesh, opt=opt, unroll=unroll, microbatch_per_shard=mps,
+                               param_specs=param_pspecs(cfg, pshape, mesh), grad_dtype=gdt)
+        args = [pshape, jax.eval_shape(lambda: ())]  # sgd state is ()
+        in_shardings = [pshard, ()]
+        for name in ("tokens", "targets", "prefix_emb"):
+            if name in structs:
+                args.append(structs[name])
+                in_shardings.append(shardings[name])
+        fn = jax.jit(
+            step,
+            in_shardings=tuple(in_shardings),
+            out_shardings=(pshard, (), None),
+            donate_argnums=(0,),
+        )
+        return fn.lower(*args)
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, unroll=unroll)
+        args = [pshape, structs["tokens"]]
+        in_shardings = [pshard, shardings["tokens"]]
+        if "prefix_emb" in structs:
+            args.append(structs["prefix_emb"])
+            in_shardings.append(shardings["prefix_emb"])
+        fn = jax.jit(step, in_shardings=tuple(in_shardings))
+        return fn.lower(*args)
+    # decode
+    step = make_serve_step(cfg, unroll=unroll)
+    cshape = cache_shape(cfg, shape)
+    cshard = cache_shardings(cfg, shape, mesh, cshape)
+    fn = jax.jit(
+        step,
+        in_shardings=(pshard, cshard, shardings["tokens"]),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+    )
+    return fn.lower(pshape, cshape, structs["tokens"])
+
+
+def _cost_and_collectives(cfg, shape, mesh, n_periods: int):
+    small = dataclasses.replace(cfg, n_layers=len(cfg.period) * n_periods)
+    lowered = lower_step(small, shape, mesh, unroll=True, single_microbatch=True)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    coll = rl.parse_collectives(compiled.as_text())
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)), coll
+
+
+def run_combo(arch: str, shape_name: str, mesh, *, skip_roofline: bool = False) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = resolve_config(arch, shape)
+    label = _mesh_label(mesh)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": label, "config": cfg.name}
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        # 1) full-depth scanned compile — memory proof
+        lowered = lower_step(cfg, shape, mesh, unroll=False)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "peak_bytes": int(
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            ),
+        }
+        rec["fits_16gb_hbm"] = rec["memory"]["peak_bytes"] < 16e9
+        rec["compile_s_full"] = round(time.time() - t0, 1)
+
+        if not skip_roofline:
+            # 2) depth-1/2 unrolled compiles — roofline extrapolation
+            f1, b1, c1 = _cost_and_collectives(cfg, shape, mesh, 1)
+            f2, b2, c2 = _cost_and_collectives(cfg, shape, mesh, 2)
+            flops = rl.extrapolate_depth(f1, f2, cfg.n_periods)
+            hbm = rl.extrapolate_depth(b1, b2, cfg.n_periods)
+            coll_bytes = rl.extrapolate_depth(
+                float(c1.total_bytes), float(c2.total_bytes), cfg.n_periods
+            )
+            breakdown = {
+                k: int(rl.extrapolate_depth(c1.bytes_by_kind.get(k, 0), c2.bytes_by_kind.get(k, 0), cfg.n_periods))
+                for k in set(c1.bytes_by_kind) | set(c2.bytes_by_kind)
+            }
+            n_dev = mesh.size
+            terms = rl.RooflineTerms(
+                arch=arch,
+                shape=shape_name,
+                mesh=label,
+                flops=flops,
+                hbm_bytes=hbm,
+                collective_bytes=coll_bytes,
+                collective_breakdown=breakdown,
+                model_flops=rl.model_flops_per_step(cfg, shape, shape.kind) / n_dev,
+            )
+            rec["roofline"] = terms.row()
+            rec["roofline"]["collectives_in_while"] = c1.in_while_body or c2.in_while_body
+
+    rec["status"] = "ok"
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES), help="one shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(REGISTRY)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mlabel, mesh in meshes:
+                tag = f"{arch}__{shape_name}__{mlabel}"
+                out = RESULTS_DIR / f"{tag}.json"
+                try:
+                    # roofline terms are single-pod deliverables; multi-pod
+                    # proves the pod axis lowers (memory only)
+                    rec = run_combo(
+                        arch, shape_name, mesh,
+                        skip_roofline=args.skip_roofline or mlabel == "multi",
+                    )
+                except Exception as e:  # a failure here is a bug in our sharding
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mlabel,
+                        "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures.append(tag)
+                out.write_text(json.dumps(rec, indent=2, default=str))
+                status = rec["status"]
+                extra = ""
+                if status == "ok" and "memory" in rec:
+                    extra = f" peak={rec['memory']['peak_bytes'] / 1e9:.2f}GB"
+                    if "roofline" in rec:
+                        r = rec["roofline"]
+                        extra += (
+                            f" compute={r['compute_s'] * 1e3:.2f}ms"
+                            f" memory={r['memory_s'] * 1e3:.2f}ms"
+                            f" collective={r['collective_s'] * 1e3:.2f}ms"
+                            f" dominant={r['dominant']}"
+                        )
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} combinations failed: {failures}")
+    print("ALL DRY-RUN COMBINATIONS LOWERED AND COMPILED.")
+
+
+if __name__ == "__main__":
+    main()

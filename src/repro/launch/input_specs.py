@@ -1,0 +1,213 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape).
+
+The four assigned input shapes:
+
+  train_4k      seq 4,096   global_batch 256   → train_step
+  prefill_32k   seq 32,768  global_batch 32    → prefill_step
+  decode_32k    seq 32,768  global_batch 128   → serve_step (1 token,
+                                                  KV cache of seq_len)
+  long_500k     seq 524,288 global_batch 1     → serve_step; only for
+                 sub-quadratic archs (SSM / hybrid / SWA overlay)
+
+Nothing here allocates: inputs are ShapeDtypeStructs (weak-type-correct,
+shardable) and parameter/cache trees come from jax.eval_shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, with_sliding_window
+from repro.models.config import ArchConfig
+from repro.models.init import init_params, param_pspecs
+from repro.models.transformer import init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# prefix positions supplied by the stub frontend (DESIGN.md §4)
+VISION_PREFIX_TRAIN = 576  # one 24×24 tile
+VISION_PREFIX_PREFILL = 2880  # anyres: 5 tiles × 576
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped). long_500k needs sub-quadratic decode."""
+    if shape.name == "long_500k":
+        if cfg.name.startswith("mistral-nemo"):
+            return True, "runs with SWA-4096 overlay"
+        if cfg.subquadratic:
+            return True, ""
+        return False, "pure full-attention arch: 500k decode cache/attn is not sub-quadratic"
+    return True, ""
+
+
+# regime-aware mesh-role selection (the paper's Eq.-7 insight applied
+# to the NN zoo — EXPERIMENTS.md §Perf-1): small dense models cannot
+# use a 16-way TP axis (gemma: 8 heads), so the "model" axis folds into
+# batch/FSDP ("dp" profile) whenever the step's batch can fill it
+# (train) or its compute is negligible (decode). Prefill's small batch
+# cannot fill the mesh → TP stays.
+DP_PROFILE_ARCHS = {"gemma-2b", "qwen2.5-3b", "musicgen-medium"}
+
+
+def select_profile(arch: str, shape: ShapeSpec) -> str:
+    if arch in DP_PROFILE_ARCHS and shape.kind in ("train", "decode"):
+        return "dp"
+    return "tp"
+
+
+def _stationary_experts_ok(cfg: ArchConfig) -> bool:
+    """Weight-stationary serving only when the per-rank resident expert
+    bytes stay small (jamba's 43 GB/rank would regress — §Perf-4)."""
+    if cfg.moe is None:
+        return False
+    from repro.models.init import padded_experts
+
+    e = cfg.moe
+    per_rank = max(padded_experts(e.n_experts) // 16, 1)
+    moe_layers = sum(1 for sp in cfg.period if sp.ff == "moe") * cfg.n_periods
+    resident = per_rank * 3 * cfg.d_model * e.d_ff_expert * 2 * moe_layers
+    return resident < 4e9
+
+
+def resolve_config(arch: str, shape: ShapeSpec) -> ArchConfig:
+    cfg = get_config(arch)
+    if shape.name == "long_500k" and cfg.name.startswith("mistral-nemo"):
+        cfg = with_sliding_window(cfg, 4096)
+    return dataclasses.replace(
+        cfg,
+        max_seq_len=max(cfg.max_seq_len, shape.seq_len),
+        sharding_profile=select_profile(arch, shape),
+        expert_weight_stationary=shape.kind == "decode" and _stationary_experts_ok(cfg),
+    )
+
+
+def batch_axes(mesh, profile: str = "tp") -> tuple[str, ...]:
+    names = ("pod", "data", "model") if profile == "dp" else ("pod", "data")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def _bspec(mesh, batch: int, *rest, profile: str = "tp") -> P:
+    """Batch sharded over the profile's batch axes, greedily dropping
+    trailing axes until the batch divides."""
+    axes = batch_axes(mesh, profile)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    while axes:
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if batch % total == 0:
+            break
+        axes = axes[:-1]
+    first = axes or None
+    if first and len(first) == 1:
+        first = first[0]
+    return P(first, *rest)
+
+
+def token_specs(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """(ShapeDtypeStructs, shardings) for the data inputs of the step."""
+    B = shape.global_batch
+    prof = cfg.sharding_profile
+    structs: dict = {}
+    shardings: dict = {}
+    if shape.kind == "train":
+        s_text = shape.seq_len
+        if cfg.frontend == "vision":
+            s_text = shape.seq_len - VISION_PREFIX_TRAIN
+            structs["prefix_emb"] = jax.ShapeDtypeStruct((B, VISION_PREFIX_TRAIN, cfg.d_model), jnp.bfloat16)
+            shardings["prefix_emb"] = NamedSharding(mesh, _bspec(mesh, B, None, None, profile=prof))
+        structs["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        structs["targets"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        shardings["tokens"] = NamedSharding(mesh, _bspec(mesh, B, profile=prof))
+        shardings["targets"] = NamedSharding(mesh, _bspec(mesh, B, profile=prof))
+    elif shape.kind == "prefill":
+        s_text = shape.seq_len
+        if cfg.frontend == "vision":
+            s_text = shape.seq_len - VISION_PREFIX_PREFILL
+            structs["prefix_emb"] = jax.ShapeDtypeStruct((B, VISION_PREFIX_PREFILL, cfg.d_model), jnp.bfloat16)
+            shardings["prefix_emb"] = NamedSharding(mesh, _bspec(mesh, B, None, None, profile=prof))
+        structs["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        shardings["tokens"] = NamedSharding(mesh, _bspec(mesh, B, profile=prof))
+    else:  # decode
+        structs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        shardings["tokens"] = NamedSharding(mesh, _bspec(mesh, B, profile=prof))
+    return structs, shardings
+
+
+def params_shape(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def params_shardings(cfg: ArchConfig, mesh, pshape=None):
+    pshape = pshape or params_shape(cfg)
+    specs = param_pspecs(cfg, pshape, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_shape(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, dtype)
+    )
+
+
+def cache_pspec_for_leaf(path_names: tuple[str, ...], leaf, mesh, batch: int) -> P:
+    """Decode-cache sharding: batch over (pod, data); the long cache
+    dim (KV seq) over "model" — sequence-parallel cache reads (kv heads
+    are rarely divisible by 16, the seq dim always is here). Mamba
+    states shard d_inner over "model"."""
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    name = path_names[-1]
+    if name == "pos":
+        return P()
+    # leading dim is n_periods (stacked), then the block-cache dims
+    shape = leaf.shape
+    spec: list = [None] * len(shape)
+    baxes = batch_axes(mesh)
+    btotal = 1
+    for a in baxes:
+        btotal *= sizes[a]
+    if batch % btotal == 0 and baxes:
+        spec[1] = baxes[0] if len(baxes) == 1 else baxes
+    model = sizes.get("model", 1)
+    if name in ("k", "v", "ckv", "kr"):
+        if shape[2] % model == 0:  # cache seq dim
+            spec[2] = "model"
+    elif name == "ssm":
+        if shape[2] % model == 0:  # d_inner
+            spec[2] = "model"
+    elif name == "conv":
+        if shape[3] % model == 0:  # d_inner (B, c, d_in) + period dim
+            spec[3] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh, cshape=None):
+    cshape = cshape or cache_shape(cfg, shape)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, path + (str(i),)) for i, v in enumerate(tree))
+        return NamedSharding(mesh, cache_pspec_for_leaf(path, tree, mesh, shape.global_batch))
+
+    return walk(cshape)

@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Single-pod: (16, 16) = ("data", "model") — 256 chips (one v5e pod).
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips.
+
+Functions, not module constants, so importing never touches jax device
+state. The axis semantics implement the paper's mesh (DESIGN.md §2):
+"model" is the frequent/exact axis (p_c, intra-pod ICI), "pod" is the
+τ-deferred FedAvg axis (p_r, crossing the slow DCI boundary).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (used by tests and the perf sweeps)."""
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def device_count_needed(*, multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256

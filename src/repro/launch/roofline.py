@@ -1,0 +1,202 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh) we derive, from the per-device SPMD module:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s      (197e12 bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw           (819e9 B/s)
+  collective term = collective_bytes_per_device / link_bw   (~50e9 B/s)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes;
+``compiled.as_text()`` parsed here for collective operand bytes (they
+are NOT in cost_analysis). XLA's cost analysis counts a while-loop body
+ONCE, so the launcher lowers depth-1 and depth-2 *unrolled* variants
+and linearly extrapolates to full depth (exact for layer-linear
+models); the full scanned compile is used for memory_analysis only.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); the ratio
+MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is useful
+(catches remat recompute and padding waste — with remat-everything the
+expected train ratio is ≈ 6/8 = 0.75 of the no-remat value).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link (effective, see DESIGN.md)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %x = bf16[16,128]{1,0} all-gather(...)   or tuple shapes
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[0-9,]*\][^\s]*\)?[^=]*?)\s*"
+    r"(?P<kind>all-gather|all-reduce-start|all-reduce|reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(",
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        bytes_per = _DTYPE_BYTES.get(m.group("dt"))
+        if bytes_per is None:
+            continue
+        dims = m.group("dims")
+        count = 1
+        if dims:
+            for d in dims.split(","):
+                count *= int(d)
+        total += count * bytes_per
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
+    in_while_body: bool  # True if any collective sits inside a while
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-buffer bytes of every collective in the module.
+
+    For all-gather/all-reduce the output size equals the full (gathered/
+    reduced) payload each device holds; for reduce-scatter the *input*
+    is the payload — we approximate with output × group_size ≈ input by
+    just using output bytes uniformly (consistent across configs, and
+    the ranking/regime use is insensitive to the ≤2× convention).
+    """
+    bytes_by_kind: dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    count_by_kind: dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    in_while = False
+    current_comp_is_body = False
+    body_names: set[str] = set()
+    for m in re.finditer(r"body=%?([\w.\-]+)", hlo_text):
+        body_names.add(m.group(1))
+
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith(("%", "ENTRY")) and stripped.endswith("{"):
+            comp_name = stripped.split(" ")[0].lstrip("%").split(".(")[0]
+            comp_name = comp_name.split("(")[0].rstrip()
+            current_comp_is_body = any(comp_name.startswith(b) or b.startswith(comp_name) for b in body_names)
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind").replace("-start", "")
+        nbytes = _shape_bytes(m.group("shape"))
+        # all-reduce-start returns (operand, result) tuples in some
+        # lowerings — halve to avoid double counting the pair
+        if "-start" in m.group(0) and m.group("shape").startswith("("):
+            nbytes //= 2
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + nbytes
+        count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+        if current_comp_is_body:
+            in_while = True
+    return CollectiveStats(bytes_by_kind, count_by_kind, in_while)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per device, full depth
+    hbm_bytes: float
+    collective_bytes: float
+    collective_breakdown: dict[str, int]
+    model_flops: float  # 6·N_active·D (global) / device
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline lower bound on step time (max of the three terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_per_dev": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "collectives": self.collective_breakdown,
+        }
+
+
+def extrapolate_depth(v1: float, v2: float, n_periods: int) -> float:
+    """cost(P) = base + P·per_period, measured at P=1 and P=2."""
+    per = max(v2 - v1, 0.0)
+    base = max(v1 - per, 0.0)
+    return base + n_periods * per
+
+
+def model_flops_per_step(cfg, shape, kind: str) -> float:
+    """6·N_active·D global model FLOPs for the step (3 matmul passes
+    fwd+bwd for train; 2·N·D for inference forward)."""
+    n_active = cfg.active_param_count() - cfg.vocab_size * cfg.d_model * (
+        0 if cfg.tie_embeddings else 1
+    )  # lm_head counted once below; embedding lookup is a gather
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # decode: 1 token/seq
+    return 2.0 * n_active * tokens

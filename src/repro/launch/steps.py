@@ -1,0 +1,138 @@
+"""Step functions the launcher lowers: train_step (microbatched SGD,
+hybrid-2D aware), prefill_step, serve_step.
+
+train_step does M gradient-accumulation microbatches (M chosen so each
+microbatch puts one sequence on each (pod × data) shard — this bounds
+the logits buffer, the decisive activation on 100k+-vocab archs) and
+one optimizer update. On a multi-pod mesh the step is wrapped in the
+hybrid-2D pod-local form (repro.optim.hybrid2d); the τ-deferred pod
+sync is a separate lowerable fn (sync_step).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.transformer import decode_step, forward, lm_loss
+from repro.optim.sgd import Optimizer, sgd
+
+
+def data_parallel_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def make_train_step(cfg: ArchConfig, mesh, opt: Optimizer | None = None,
+                    microbatch_per_shard: int = 1, unroll: bool = False,
+                    param_specs=None, grad_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, tokens, targets[, prefix])
+    → (params, opt_state, loss).
+
+    ``param_specs``: PartitionSpec tree for params; when given, the
+    gradient accumulator is constrained to the same layout (without it
+    XLA was measured to replicate MoE expert grads — 12.9 GB/dev on
+    jamba, EXPERIMENTS.md §Perf P-gacc).
+    ``grad_dtype``: accumulator dtype; bf16 halves the dominant
+    gradient buffers on ≥100B-param models (§Perf-3) at an accepted
+    precision cost for plain-SGD training."""
+    opt = opt or sgd(3e-3)
+    dp = data_parallel_size(mesh)
+
+    def constrain(tree):
+        if param_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda t, spec: jax.lax.with_sharding_constraint(t, spec),
+            tree,
+            param_specs,
+            is_leaf=lambda x: x is None,
+        )
+
+    def loss_fn(params, tokens, targets, prefix_emb=None):
+        return lm_loss(cfg, params, tokens, targets, prefix_emb=prefix_emb,
+                       remat=True, unroll=unroll)
+
+    def train_step(params, opt_state, tokens, targets, prefix_emb=None):
+        B = tokens.shape[0]
+        mb = dp * microbatch_per_shard
+        M = max(B // mb, 1)
+
+        def micro(carry, xs):
+            g_acc, l_acc = carry
+            if prefix_emb is None:
+                tok, tgt = xs
+                loss, g = jax.value_and_grad(loss_fn)(params, tok, tgt)
+            else:
+                tok, tgt, pre = xs
+                loss, g = jax.value_and_grad(loss_fn)(params, tok, tgt, pre)
+            g_acc = constrain(jax.tree.map(jnp.add, g_acc, g))
+            return (g_acc, l_acc + loss), None
+
+        def split(x):
+            return x.reshape(M, x.shape[0] // M, *x.shape[1:])
+
+        xs = (split(tokens), split(targets))
+        if prefix_emb is not None:
+            xs = xs + (split(prefix_emb),)
+        def acc_dtype(p):
+            # f32-stored params (A_log, router) keep f32 accumulators
+            return grad_dtype if p.dtype == jnp.bfloat16 else jnp.float32
+
+        g0 = constrain(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype(p)), params))
+        (g, loss), _ = jax.lax.scan(micro, (g0, jnp.float32(0)), xs)
+        g = jax.tree.map(lambda x: x / M, g)
+        new_params, new_state = opt.update(g, opt_state, params)
+        return new_params, new_state, loss / M
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, unroll: bool = False):
+    """prefill_step(params, tokens[, prefix]) → last-position logits.
+    (A production server would also return the populated KV cache; the
+    compute and memory profile is dominated by the forward pass either
+    way.)"""
+
+    def prefill_step(params, tokens, prefix_emb=None):
+        return forward(cfg, params, tokens, prefix_emb, last_only=True, unroll=unroll)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, unroll: bool = False):
+    """serve_step(params, cache, tokens) → (logits, cache): ONE new
+    token against a seq_len-deep cache."""
+
+    def serve_step(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, unroll=unroll)
+
+    return serve_step
+
+
+def make_pod_sync_step(mesh):
+    """The paper's τ-deferred column Allreduce at pod scale: average
+    params across the "pod" axis. Identity on single-pod meshes."""
+    if "pod" not in mesh.axis_names:
+        return lambda params: params
+
+    def sync(params):
+        # params replicated per pod drift during τ local steps; the sync
+        # is a pmean expressed as a resharding-free global mean when
+        # params carry no pod dim — here we mark it with an explicit
+        # collective via shard_map over the pod axis.
+        smap = jax.shard_map(
+            lambda p: jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), p),
+            mesh=mesh,
+            axis_names=frozenset({"pod"}),
+            in_specs=P(),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return smap(params)
+
+    return sync

@@ -1,0 +1,59 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs real training (allocates!) on whatever devices exist — on this
+CPU container use a reduced config; on a TPU slice pass --full. The
+hybrid-2D schedule (pod-local steps, τ-deferred sync) engages when the
+mesh has a "pod" axis.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.train.loop import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--tau", type=int, default=10)
+    ap.add_argument("--full", action="store_true", help="full config (needs real accelerators)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--mesh", default=None, help='e.g. "2x2:data,model" or "2x2x2:pod,data,model"')
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+
+    mesh = None
+    if args.mesh:
+        shape_s, axes_s = args.mesh.split(":")
+        shape = tuple(int(x) for x in shape_s.split("x"))
+        axes = tuple(axes_s.split(","))
+        mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+    if mesh is not None:
+        jax.sharding.set_mesh(mesh)
+    report = train(
+        cfg,
+        steps=args.steps,
+        batch=args.batch,
+        seq_len=args.seq_len,
+        tau=args.tau,
+        mesh=mesh,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=50 if args.checkpoint_dir else 0,
+    )
+    print(f"arch={cfg.name} steps={report.steps} tokens/s={report.tokens_per_s:.0f}")
+    print("losses:", " ".join(f"{l:.4f}" for l in report.losses))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Model zoo: config-driven decoder covering the 10 assigned archs."""
+
+from repro.models.config import ArchConfig, LayerSpec, MLAConfig, MambaConfig, MoEConfig
+from repro.models.init import init_params, param_pspecs
+from repro.models.transformer import decode_step, forward, init_cache, lm_loss
+
+__all__ = [
+    "ArchConfig",
+    "LayerSpec",
+    "MLAConfig",
+    "MambaConfig",
+    "MoEConfig",
+    "init_params",
+    "param_pspecs",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "lm_loss",
+]

@@ -1,0 +1,453 @@
+"""Layer blocks: norms, RoPE, attention (GQA/MQA/SWA/MLA), gated MLP,
+MoE (ragged_dot grouped matmul), Mamba-1.
+
+All blocks are pure functions (params-dict first). Each mixer has a
+full-sequence form (training / prefill) and a single-token decode form
+threading an explicit cache/state — the decode forms are what
+``serve_step`` lowers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, LayerSpec
+from repro.models.sharding import shard
+
+
+def rmsnorm(g: jnp.ndarray, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_frequencies(head_dim: int, theta: float, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for ``positions`` (any shape) × head_dim/2."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., n_heads, head_dim); cos/sin broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------- attention
+
+
+def _sdpa(q, k, v, mask, scale, kv_seq_sharded: bool = False) -> jnp.ndarray:
+    """Grouped-query attention without materializing repeated KV.
+
+    q: (B,S,H,D); k/v: (B,L,KV,D) with H = KV·G. The KV tensors are
+    used as-is (repeating them 3-6× was measured to force an 8.6 GB/dev
+    cache all-gather on seq-sharded decode — EXPERIMENTS.md §Perf).
+
+    ``kv_seq_sharded``: constrain the score/prob tensors so their L dim
+    inherits the cache's "model"-axis sharding — XLA then psums the
+    tiny (B,S,H,D) contraction instead of gathering the cache.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q5 = q.reshape(B, S, KV, G, D)
+    logits = jnp.einsum("bskgd,blkd->bkgsl", q5, k) * scale
+    if kv_seq_sharded or PIN_SCORE_BATCH:
+        logits = shard(logits, "batch", None, None, None, "cache_seq" if kv_seq_sharded else None)
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    if kv_seq_sharded or PIN_SCORE_BATCH:
+        probs = shard(probs, "batch", None, None, None, "cache_seq" if kv_seq_sharded else None)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, v)
+    return out.reshape(B, S, H, D)
+
+
+def _repeat_kv_flat(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, KV, D) → (B, S, H, D), sharded over heads where divisible."""
+    KV = k.shape[2]
+    if KV != n_heads:
+        k = jnp.repeat(k, n_heads // KV, axis=2)
+    return shard(k, "batch", None, "heads", None)
+
+
+def _sdpa_flat(q, k, v, mask, scale) -> jnp.ndarray:
+    """Flat-head attention (train path): q/k/v (B, S, H, D); scores
+    (B, H, S, L) shard over heads on the model axis."""
+    logits = jnp.einsum("bshd,blhd->bhsl", q, k) * scale
+    logits = shard(logits, "batch", "heads", None, None)
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    probs = shard(probs, "batch", "heads", None, None)
+    return jnp.einsum("bhsl,blhd->bshd", probs, v)
+
+
+# sequences longer than this use the query-chunked (flash-style) path:
+# the (S × S) score matrix at 32k+ was measured at 25.8 GB/dev/layer on
+# granite-34b prefill (EXPERIMENTS.md §Perf P-flash)
+CHUNKED_ATTN_THRESHOLD = 8192
+ATTN_Q_CHUNK = 1024
+# pin the batch dim of attention scores (ablation toggle, §Perf-1)
+PIN_SCORE_BATCH = True
+
+
+def _sdpa_chunked(q, k, v, scale, window: int = 0, q_chunk: int = ATTN_Q_CHUNK):
+    """Causal flat-head attention with softmax over query chunks —
+    bounds score memory at (B, H, q_chunk, S) instead of (…, S, S).
+    Pure JAX (lax.scan over chunks); the TPU-kernel analogue is flash
+    attention, this is its memory behaviour at the XLA level. Expects
+    k/v already head-repeated (train path)."""
+    B, S, H, D = q.shape
+    n_chunks = S // q_chunk
+    q5 = q.reshape(B, n_chunks, q_chunk, H, D).swapaxes(0, 1)
+    kpos = jnp.arange(S)
+
+    def chunk(carry, inp):
+        ci, qc = inp  # qc: (B, q_chunk, H, D)
+        qpos = ci * q_chunk + jnp.arange(q_chunk)
+        logits = jnp.einsum("bshd,blhd->bhsl", qc, k).astype(jnp.float32) * scale
+        logits = shard(logits, "batch", "heads", None, None)
+        mask = qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p_ = jnp.exp(logits - m)
+        l = jnp.sum(p_, axis=-1)
+        o = jnp.einsum("bhsl,blhd->bshd", p_.astype(q.dtype), v)
+        o = o / l.swapaxes(1, 2)[..., None].astype(o.dtype)
+        return carry, o
+
+    _, outs = jax.lax.scan(chunk, (), (jnp.arange(n_chunks), q5))
+    return outs.swapaxes(0, 1).reshape(B, S, H, D)
+
+
+def attn_train(p, cfg: ArchConfig, spec: LayerSpec, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence causal attention (training / prefill)."""
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(cfg.d_model, H, D))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].reshape(cfg.d_model, KV, D))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].reshape(cfg.d_model, KV, D))
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, D)
+        k = k + p["bk"].reshape(KV, D)
+        v = v + p["bv"].reshape(KV, D)
+    pos = jnp.arange(S)
+    cos, sin = rope_frequencies(D, cfg.rope_theta, pos)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    window = cfg.sliding_window if (spec.attn == "swa" and cfg.sliding_window) else 0
+    # TRAIN path uses flat heads with repeated KV: the grouped (KV, G)
+    # reshape breaks head sharding when KV doesn't divide the model
+    # axis (jamba: KV=8 on a 16-way axis), which was measured to
+    # replicate every head's (S×S) scores on every device — 4.3 GB ×85
+    # buffers (§Perf-3). Repeating KV costs only (B,S,H,D) here (train
+    # KV is small; decode keeps the grouped no-repeat form).
+    kr = _repeat_kv_flat(k, H)
+    vr = _repeat_kv_flat(v, H)
+    if S > CHUNKED_ATTN_THRESHOLD and S % ATTN_Q_CHUNK == 0:
+        out = _sdpa_chunked(q, kr, vr, D**-0.5, window=window, q_chunk=ATTN_Q_CHUNK)
+    else:
+        causal = pos[:, None] >= pos[None, :]
+        if window:
+            causal &= pos[:, None] - pos[None, :] < window
+        out = _sdpa_flat(q, kr, vr, causal[None, None], D**-0.5)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].reshape(H, D, cfg.d_model))
+
+
+def init_attn_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int, dtype):
+    L = min(cfg.sliding_window, max_len) if spec.attn == "swa" and cfg.sliding_window else max_len
+    KV, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, L, KV, D), dtype),
+        "v": jnp.zeros((batch, L, KV, D), dtype),
+    }
+
+
+def attn_decode(p, cfg: ArchConfig, spec: LayerSpec, x: jnp.ndarray, cache, pos):
+    """One-token decode. x: (B, 1, d); pos: scalar current position."""
+    B = x.shape[0]
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    L = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(cfg.d_model, H, D))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].reshape(cfg.d_model, KV, D))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].reshape(cfg.d_model, KV, D))
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, D)
+        k = k + p["bk"].reshape(KV, D)
+        v = v + p["bv"].reshape(KV, D)
+    cos, sin = rope_frequencies(D, cfg.rope_theta, jnp.full((1,), pos))
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = pos % L  # ring buffer (SWA) / direct slot (full, L = max_len)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    ck = shard(ck, "batch", "cache_seq", None, None)
+    cv = shard(cv, "batch", "cache_seq", None, None)
+    idx = jnp.arange(L)
+    valid = jnp.where(pos >= L, jnp.ones((L,), bool), idx <= slot)
+    out = _sdpa(q, ck, cv, valid[None, None, None, None, :], D**-0.5, kv_seq_sharded=True)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].reshape(H, D, cfg.d_model))
+    return y, {"k": ck, "v": cv}
+
+
+# ------------------------------------------------- MLA (DeepSeek-V2)
+
+
+def _mla_qkv(p, cfg: ArchConfig, x, positions):
+    m = cfg.mla
+    H = cfg.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(cfg.d_model, H, qd))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    cos, sin = rope_frequencies(m.qk_rope_head_dim, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # (B,S,lora)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_kr"])  # shared rope key
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_attend(p, cfg: ArchConfig, q_nope, q_rope, ckv, k_rope, mask, kv_seq_sharded=False):
+    """Latent-space attention: queries are absorbed into the KV-LoRA
+    basis so the cache stays (lora + rope) wide — MLA's memory win."""
+    m = cfg.mla
+    H = cfg.n_heads
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    # absorb: q̃ = q_nope · W_UKᵀ lives in the lora space
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
+    logits = jnp.einsum("bshr,blr->bhsl", q_lat, ckv)
+    logits += jnp.einsum("bshk,blk->bhsl", q_rope, k_rope)
+    if kv_seq_sharded:
+        # pin L to the cache's "model" sharding — without this XLA was
+        # measured to all-gather the full 537 MB f32 ckv cache per
+        # decode layer (§Perf-4)
+        logits = shard(logits, "batch", None, None, "cache_seq")
+    elif PIN_SCORE_BATCH:
+        logits = shard(logits, "batch", None, None, None)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = jnp.where(mask, logits * scale, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q_nope.dtype)
+    if kv_seq_sharded:
+        probs = shard(probs, "batch", None, None, "cache_seq")
+    elif PIN_SCORE_BATCH:
+        probs = shard(probs, "batch", None, None, None)
+    ctx = jnp.einsum("bhsl,blr->bshr", probs, ckv)  # context in lora space
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, w_uv)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].reshape(H, m.v_head_dim, cfg.d_model))
+
+
+def _mla_attend_chunked(p, cfg: ArchConfig, q_nope, q_rope, ckv, k_rope, q_chunk: int = ATTN_Q_CHUNK):
+    """Query-chunked MLA (same memory bound as _sdpa_chunked)."""
+    B, S, H, _ = q_nope.shape
+    n_chunks = S // q_chunk
+    kpos = jnp.arange(S)
+    qn = q_nope.reshape(B, n_chunks, q_chunk, H, -1).swapaxes(0, 1)
+    qr = q_rope.reshape(B, n_chunks, q_chunk, H, -1).swapaxes(0, 1)
+
+    def chunk(carry, inp):
+        ci, qn_c, qr_c = inp
+        qpos = ci * q_chunk + jnp.arange(q_chunk)
+        mask = (qpos[:, None] >= kpos[None, :])[None, None]
+        o = _mla_attend(p, cfg, qn_c, qr_c, ckv, k_rope, mask)
+        return carry, o
+
+    _, outs = jax.lax.scan(chunk, (), (jnp.arange(n_chunks), qn, qr))
+    return outs.swapaxes(0, 1).reshape(B, S, cfg.d_model)
+
+
+def mla_train(p, cfg: ArchConfig, spec: LayerSpec, x: jnp.ndarray) -> jnp.ndarray:
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, pos)
+    if S > CHUNKED_ATTN_THRESHOLD and S % ATTN_Q_CHUNK == 0:
+        return _mla_attend_chunked(p, cfg, q_nope, q_rope, ckv, k_rope, q_chunk=ATTN_Q_CHUNK)
+    mask = (pos[:, None] >= pos[None, :])[None, None]
+    return _mla_attend(p, cfg, q_nope, q_rope, ckv, k_rope, mask)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, cfg: ArchConfig, spec: LayerSpec, x, cache, pos):
+    q_nope, q_rope, ckv_new, kr_new = _mla_qkv(p, cfg, x, jnp.full((1,), pos))
+    L = cache["ckv"].shape[1]
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new, pos, axis=1)
+    ckv = shard(ckv, "batch", "cache_seq", None)
+    valid = jnp.arange(L) <= pos
+    y = _mla_attend(p, cfg, q_nope, q_rope, ckv, kr, valid[None, None, None, :],
+                    kv_seq_sharded=True)
+    return y, {"ckv": ckv, "kr": kr}
+
+
+# ------------------------------------------------------------ MLP/MoE
+
+
+def _act(name: str, x):
+    return jax.nn.silu(x) if name == "silu" else jax.nn.gelu(x)
+
+
+def mlp(p, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Gated MLP (SwiGLU / GeGLU)."""
+    h = _act(cfg.mlp_act, x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", None, "ff")
+    return h @ p["w_down"]
+
+
+def moe(p, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Token-choice top-k MoE via sort + jax.lax.ragged_dot.
+
+    Grouped matmuls count only *active* FLOPs in cost_analysis (unlike a
+    dense every-expert-every-token dispatch, which would inflate the
+    roofline 10-30×). On a mesh with a non-trivial "model" axis the
+    expert-parallel all_to_all path (repro.models.moe_ep) is used;
+    the local path below serves single-device runs and smoke tests.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is not None and not mesh.empty and cfg.sharding_profile == "tp":
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        if sizes.get("model", 1) > 1:
+            from repro.models.moe_ep import moe_ep
+
+            return moe_ep(cfg, p, x)
+    e = cfg.moe
+    B, S, d = x.shape
+    t = x.reshape(B * S, d)
+    logits = t @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, e.top_k)  # (T, k)
+    top_p = (top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    flat_expert = top_i.reshape(-1)  # (T·k,)
+    order = jnp.argsort(flat_expert)
+    inv = jnp.argsort(order)
+    t_rep = jnp.repeat(t, e.top_k, axis=0)[order]  # sorted by expert
+    group_sizes = jnp.bincount(flat_expert, length=p["w_gate_e"].shape[0]).astype(jnp.int32)
+
+    h = jax.lax.ragged_dot(t_rep, p["w_gate_e"], group_sizes)
+    h = _act(cfg.mlp_act, h) * jax.lax.ragged_dot(t_rep, p["w_up_e"], group_sizes)
+    y = jax.lax.ragged_dot(h, p["w_down_e"], group_sizes)
+    y = y[inv].reshape(B * S, e.top_k, d)
+    y = jnp.einsum("tkd,tk->td", y, top_p.astype(y.dtype))
+
+    if e.n_shared:
+        sh = _act(cfg.mlp_act, t @ p["w_gate_sh"]) * (t @ p["w_up_sh"])
+        y = y + sh @ p["w_down_sh"]
+    return y.reshape(B, S, d)
+
+
+# ------------------------------------------------------------- Mamba-1
+
+
+def _mamba_dims(cfg: ArchConfig):
+    mb = cfg.mamba
+    d_in = mb.expand * cfg.d_model
+    dt_rank = mb.dt_rank or -(-cfg.d_model // 16)
+    return mb, d_in, dt_rank
+
+
+def _ssm_scan_chunked(dt, xi, Bc, Cc, A, h0, chunk: int):
+    """Selective scan with the (B, ·, d_in, N) discretized tensors
+    materialized only PER CHUNK: sequential lax.scan over S/chunk
+    chunks, associative scan inside each. Discretizing the whole
+    sequence up front was measured at 268 GB/dev on jamba train_4k
+    (EXPERIMENTS.md §Perf P-ssm); per-chunk it is chunk/S of that.
+
+    The recurrence runs in f32 (bf16 state drifts over long sequences).
+    Returns (y: (B,S,D) f32, h_last: (B,D,N) f32).
+    """
+    B, S, D = dt.shape
+    N = A.shape[1]
+    n_chunks = S // chunk
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, inputs):
+        dt_c, xi_c, b_c, c_c = inputs  # (B, chunk, ·)
+        a_bar = jnp.exp(dt_c[..., None].astype(jnp.float32) * A)  # (B,chunk,D,N)
+        bx = ((dt_c * xi_c)[..., None] * b_c[:, :, None, :]).astype(jnp.float32)
+        a_acc, b_acc = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        hs = a_acc * h[:, None] + b_acc  # prefix states within the chunk
+        y_c = jnp.einsum("bsdn,bsn->bsd", hs, c_c.astype(jnp.float32))
+        return hs[:, -1], y_c
+
+    split = lambda t: t.reshape(B, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(step, h0, (split(dt), split(xi), split(Bc), split(Cc)))
+    return ys.swapaxes(0, 1).reshape(B, S, D), h_last
+
+
+def mamba_train(p, cfg: ArchConfig, x: jnp.ndarray, chunk: int = 256) -> jnp.ndarray:
+    """Full-sequence Mamba-1 (selective SSM) forward."""
+    mb, d_in, dt_rank = _mamba_dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ p["in_proj"]  # (B,S,2*d_in)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard(xi, "batch", None, "d_inner")
+    # causal depthwise conv over time
+    pad = jnp.pad(xi, ((0, 0), (mb.d_conv - 1, 0), (0, 0)))
+    xi = sum(
+        pad[:, i : i + S, :] * p["conv_w"][:, i] for i in range(mb.d_conv)
+    ) + p["conv_b"]
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ p["x_proj"]  # (B,S,dt_rank+2N)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + mb.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # (B,S,d_in)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (d_in, N)
+
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fallback: single associative scan
+    h0 = jnp.zeros((B, d_in, mb.d_state), jnp.float32)
+    y, _ = _ssm_scan_chunked(dt, xi, Bc, Cc, A, h0, chunk)
+    y = y + (xi * p["D"]).astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"]
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype):
+    mb, d_in, _ = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, mb.d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, mb.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg: ArchConfig, x, state, pos):
+    """Single-token recurrence — O(1) state, the long_500k enabler."""
+    del pos
+    mb, d_in, dt_rank = _mamba_dims(cfg)
+    B = x.shape[0]
+    xz = x[:, 0, :] @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, d_in)
+    window = jnp.concatenate([state["conv"], xi[:, None, :]], axis=1)  # (B,d_conv,d_in)
+    xi = jnp.einsum("bcd,dc->bd", window, p["conv_w"]) + p["conv_b"]
+    xi = jax.nn.silu(xi)
+    proj = xi @ p["x_proj"]
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + mb.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a_bar = jnp.exp(dt[..., None] * A)  # (B,d_in,N)
+    h = a_bar * state["ssm"] + (dt * xi)[..., None] * Bc[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cc) + xi * p["D"]
+    y = y * jax.nn.silu(z)
+    y = (y.astype(x.dtype) @ p["out_proj"])[:, None, :]
+    return y, {"conv": window[:, 1:, :], "ssm": h}

@@ -1,0 +1,242 @@
+"""Parameter initialization + sharding specs for the decoder zoo.
+
+Params are a pytree:
+  {"embed": (V,d), "proj": (d,d)?, "norm_f": (d,), "lm_head": (d,V)?,
+   "layers": tuple(per period position) of dicts whose arrays all carry
+   a leading n_periods axis (scanned)}
+
+``param_pspecs`` returns the same-structure tree of PartitionSpecs:
+model-parallel dims on "model" (the paper's p_c role), FSDP dim on
+"data" where divisible (DESIGN.md §4). Falls back to replicated on any
+non-divisible dim so every assigned arch lowers on every mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig, LayerSpec
+
+
+def padded_experts(n_experts: int) -> int:
+    """Experts allocated, padded to the 16-wide production model axis
+    (only when ≥16 — reduced smoke configs stay unpadded)."""
+    return -(-n_experts // 16) * 16 if n_experts >= 16 else n_experts
+
+
+def _norm(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _init_layer(key, cfg: ArchConfig, spec: LayerSpec, dtype) -> dict:
+    d = cfg.d_model
+    ks = iter(jax.random.split(key, 32))
+    p: dict = {"ln1": jnp.ones((d,), dtype)}
+    if spec.mixer == "attn":
+        H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        if spec.attn == "mla":
+            m = cfg.mla
+            qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            p |= {
+                "wq": _norm(next(ks), (d, H * qd), d**-0.5, dtype),
+                "w_dkv": _norm(next(ks), (d, m.kv_lora_rank), d**-0.5, dtype),
+                "w_kr": _norm(next(ks), (d, m.qk_rope_head_dim), d**-0.5, dtype),
+                "w_uk": _norm(next(ks), (m.kv_lora_rank, H * m.qk_nope_head_dim), m.kv_lora_rank**-0.5, dtype),
+                "w_uv": _norm(next(ks), (m.kv_lora_rank, H * m.v_head_dim), m.kv_lora_rank**-0.5, dtype),
+                "wo": _norm(next(ks), (H * m.v_head_dim, d), (H * m.v_head_dim) ** -0.5, dtype),
+            }
+        else:
+            p |= {
+                "wq": _norm(next(ks), (d, H * D), d**-0.5, dtype),
+                "wk": _norm(next(ks), (d, KV * D), d**-0.5, dtype),
+                "wv": _norm(next(ks), (d, KV * D), d**-0.5, dtype),
+                "wo": _norm(next(ks), (H * D, d), (H * D) ** -0.5, dtype),
+            }
+            if cfg.qkv_bias:
+                p |= {
+                    "bq": jnp.zeros((H * D,), dtype),
+                    "bk": jnp.zeros((KV * D,), dtype),
+                    "bv": jnp.zeros((KV * D,), dtype),
+                }
+    else:  # mamba
+        mb = cfg.mamba
+        d_in = mb.expand * d
+        dt_rank = mb.dt_rank or -(-d // 16)
+        p |= {
+            "in_proj": _norm(next(ks), (d, 2 * d_in), d**-0.5, dtype),
+            "conv_w": _norm(next(ks), (d_in, mb.d_conv), mb.d_conv**-0.5, dtype),
+            "conv_b": jnp.zeros((d_in,), dtype),
+            "x_proj": _norm(next(ks), (d_in, dt_rank + 2 * mb.d_state), d_in**-0.5, dtype),
+            "dt_proj": _norm(next(ks), (dt_rank, d_in), dt_rank**-0.5, dtype),
+            "dt_bias": jnp.full((d_in,), -4.6, dtype),  # softplus ≈ 0.01
+            "A_log": jnp.log(
+                jnp.broadcast_to(jnp.arange(1, mb.d_state + 1, dtype=jnp.float32), (d_in, mb.d_state))
+            ),
+            "D": jnp.ones((d_in,), dtype),
+            "out_proj": _norm(next(ks), (d_in, d), d_in**-0.5, dtype),
+        }
+    if spec.ff != "none":
+        p["ln2"] = jnp.ones((d,), dtype)
+    if spec.ff == "dense":
+        p |= {
+            "w_gate": _norm(next(ks), (d, cfg.d_ff), d**-0.5, dtype),
+            "w_up": _norm(next(ks), (d, cfg.d_ff), d**-0.5, dtype),
+            "w_down": _norm(next(ks), (cfg.d_ff, d), cfg.d_ff**-0.5, dtype),
+        }
+    elif spec.ff == "moe":
+        e = cfg.moe
+        # expert dim padded to a multiple of the production model-axis
+        # size (16): 40 experts → 48 zero rows. The router stays (d, E)
+        # so pads are never routed to; this turns granite-moe's
+        # replicated-expert fallback into true expert parallelism
+        # (§Perf-2: 378 MB/layer f32 weight gathers → token all_to_all).
+        e_pad = padded_experts(e.n_experts)
+        p |= {
+            "router": _norm(next(ks), (d, e.n_experts), d**-0.5, jnp.float32),
+            "w_gate_e": _norm(next(ks), (e_pad, d, e.d_ff_expert), d**-0.5, dtype),
+            "w_up_e": _norm(next(ks), (e_pad, d, e.d_ff_expert), d**-0.5, dtype),
+            "w_down_e": _norm(next(ks), (e_pad, e.d_ff_expert, d), e.d_ff_expert**-0.5, dtype),
+        }
+        if e.n_shared:
+            ff_sh = e.n_shared * e.d_ff_expert
+            p |= {
+                "w_gate_sh": _norm(next(ks), (d, ff_sh), d**-0.5, dtype),
+                "w_up_sh": _norm(next(ks), (d, ff_sh), d**-0.5, dtype),
+                "w_down_sh": _norm(next(ks), (ff_sh, d), ff_sh**-0.5, dtype),
+            }
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    keys = jax.random.split(key, len(cfg.period) + 3)
+    layers = []
+    for i, spec in enumerate(cfg.period):
+        per_period = [
+            _init_layer(jax.random.fold_in(keys[i], r), cfg, spec, dtype)
+            for r in range(cfg.n_periods)
+        ]
+        layers.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_period))
+    params = {
+        "embed": _norm(keys[-3], (cfg.vocab_size, cfg.d_model), cfg.d_model**-0.5, dtype),
+        "norm_f": jnp.ones((cfg.d_model,), dtype),
+        "layers": tuple(layers),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _norm(keys[-2], (cfg.d_model, cfg.vocab_size), cfg.d_model**-0.5, dtype)
+    if cfg.frontend != "none":
+        params["proj"] = _norm(keys[-1], (cfg.d_model, cfg.d_model), cfg.d_model**-0.5, dtype)
+    return params
+
+
+# ---------------------------------------------------------------- specs
+
+
+def _div(size: int, axes: tuple[str, ...], mesh_sizes: dict[str, int]) -> bool:
+    total = 1
+    for a in axes:
+        total *= mesh_sizes.get(a, 1)
+    return size % total == 0
+
+
+def _wspec(shape, want: tuple[tuple[str, ...] | None, ...], mesh_sizes) -> P:
+    """Build a PartitionSpec for a (possibly period-stacked) weight,
+    dropping any axis group that does not divide its dim."""
+    entries = []
+    for size, axes in zip(shape, want):
+        if not axes:
+            entries.append(None)
+            continue
+        axes = tuple(a for a in axes if a in mesh_sizes)
+        if axes and _div(size, axes, mesh_sizes):
+            entries.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+_MODEL = ("model",)
+_FSDP = ("data",)
+
+# per-param logical layout: map name -> tuple of axis-groups per dim
+# (None = replicated). Leading n_periods dim handled by caller.
+_LAYOUTS = {
+    "wq": (_FSDP, _MODEL), "wk": (_FSDP, _MODEL), "wv": (_FSDP, _MODEL),
+    "wo": (_MODEL, _FSDP),
+    "bq": (_MODEL,), "bk": (_MODEL,), "bv": (_MODEL,),
+    "w_dkv": (_FSDP, None), "w_kr": (_FSDP, None),
+    "w_uk": (None, _MODEL), "w_uv": (None, _MODEL),
+    "w_gate": (_FSDP, _MODEL), "w_up": (_FSDP, _MODEL), "w_down": (_MODEL, _FSDP),
+    "router": (_FSDP, None),
+    # experts: E over the model axis (expert parallelism) and dim-1
+    # FSDP over data (all-gathered per layer inside models/moe_ep.py).
+    # Falls back to replicated when E is not divisible (granite-moe).
+    "w_gate_e": (_MODEL, _FSDP, None), "w_up_e": (_MODEL, _FSDP, None),
+    "w_down_e": (_MODEL, _FSDP, None),
+    "w_gate_sh": (_FSDP, _MODEL), "w_up_sh": (_FSDP, _MODEL), "w_down_sh": (_MODEL, _FSDP),
+    "in_proj": (_FSDP, _MODEL), "out_proj": (_MODEL, _FSDP),
+    "conv_w": (_MODEL, None), "conv_b": (_MODEL,),
+    "x_proj": (_MODEL, None), "dt_proj": (None, _MODEL), "dt_bias": (_MODEL,),
+    "A_log": (_MODEL, None), "D": (_MODEL,),
+    "ln1": (None,), "ln2": (None,),
+}
+
+
+_DP_FSDP = ("data", "model")  # "dp" profile: model axis folds into FSDP
+
+
+def param_pspecs(cfg: ArchConfig, params_shape, mesh) -> dict:
+    """PartitionSpec tree matching ``params_shape`` (a tree of
+    ShapeDtypeStruct or arrays). Honors cfg.sharding_profile: "dp"
+    shards every weight's dim-0 over ("data","model") and nothing else
+    (pure FSDP — EXPERIMENTS.md §Perf-1)."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.shape.values() if hasattr(mesh.shape, "values") else mesh.axis_sizes))
+    dp = cfg.sharding_profile == "dp"
+
+    def leaf_spec(path: tuple, leaf) -> P:
+        shape = leaf.shape
+        name = path[-1]
+        if dp:
+            if name in ("norm_f", "ln1", "ln2") or len(shape) < 2:
+                return P(*([None] * len(shape)))
+            if name == "embed":
+                # keep vocab-parallel even under dp: unsharded logits
+                # were measured at +19 GB/dev peak (§Perf-1)
+                return _wspec(shape, (_MODEL, _FSDP), mesh_sizes)
+            if name == "lm_head":
+                return _wspec(shape, (_FSDP, _MODEL), mesh_sizes)
+            if name == "proj":
+                return _wspec(shape, (_DP_FSDP, None), mesh_sizes)
+            # layer params carry the leading n_periods axis: FSDP dim-1
+            want = (None, _DP_FSDP) + (None,) * (len(shape) - 2)
+            return _wspec(shape, want, mesh_sizes)
+        if name == "embed":
+            # vocab-parallel (Megatron-style): d_model replicated so the
+            # logits matmul contracts locally — FSDP-sharding d here was
+            # measured to cost a 119 GB/dev logits all-reduce on gemma
+            # (EXPERIMENTS.md §Perf, iteration 0)
+            return _wspec(shape, (_MODEL, None), mesh_sizes)
+        if name == "lm_head":
+            return _wspec(shape, (None, _MODEL), mesh_sizes)
+        if name in ("norm_f",):
+            return P(None)
+        if name == "proj":
+            return _wspec(shape, (_FSDP, _MODEL), mesh_sizes)
+        layout = _LAYOUTS.get(name)
+        if layout is None:
+            return P(*([None] * len(shape)))
+        if cfg.expert_weight_stationary and name in ("w_gate_e", "w_up_e", "w_down_e"):
+            # serving: experts resident per rank — E over "model" only
+            return _wspec(shape, (None, _MODEL, None, None), mesh_sizes)
+        # layer params carry a leading n_periods axis
+        return _wspec(shape, (None,) + tuple(layout), mesh_sizes)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, path + (str(i),)) for i, v in enumerate(tree))
+        return leaf_spec(path, tree)
+
+    return walk(params_shape)

@@ -1,0 +1,224 @@
+"""Expert-parallel MoE via nested shard_map + all_to_all.
+
+Why: lax.ragged_dot has no GSPMD partitioning rule, so under pure auto
+sharding XLA replicates the grouped-matmul operands — measured 370 GB/dev
+temp on jamba train_4k (EXPERIMENTS.md §Perf P-ep). The scalable layout
+is true expert parallelism (the assignment's "expert-parallel sharding …
+all-to-all"):
+
+  * experts are sharded over the "model" axis (E/m per rank — the
+    paper's p_c exact-sharding role);
+  * tokens are block-split over the model axis inside the manual
+    region (padded when not divisible, e.g. decode's few tokens);
+  * one all_to_all routes token copies to their experts' owners, a
+    second routes results back; each rank runs a *local* ragged_dot
+    over its resident experts (a purely local op — no GSPMD rule
+    needed);
+  * an all_gather over the model axis restores the activation layout.
+
+Capacity: each (src, dst) pair carries cap = ceil(T_src·k·cf / m)
+slots; overflow copies are dropped (capacity-factor routing, cf = 2)
+and the surviving router weights keep their normalization (drop = lost
+contribution, exactly like dropped-token MoE implementations).
+
+Fallback when E is not divisible by the model axis (granite-moe: 40
+experts, 16-way axis): experts replicated inside the manual region
+(they are small in every such config), tokens still split over model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def _act(name: str, x):
+    return jax.nn.silu(x) if name == "silu" else jax.nn.gelu(x)
+
+
+def _local_expert_mlp(cfg, t_sorted, group_sizes, w_gate, w_up, w_down):
+    """Grouped matmul over this rank's resident experts (local op)."""
+    h = jax.lax.ragged_dot(t_sorted, w_gate, group_sizes)
+    h = _act(cfg.mlp_act, h) * jax.lax.ragged_dot(t_sorted, w_up, group_sizes)
+    return jax.lax.ragged_dot(h, w_down, group_sizes)
+
+
+def _route(cfg, t, router):
+    e = cfg.moe
+    logits = t.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, e.top_k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p.astype(t.dtype), top_i
+
+
+def _my_tokens(t_all, m: int, r):
+    """Contiguous block split of T_loc tokens over m ranks, padded so
+    every rank holds T_pad = ceil(T_loc/m); returns (t, valid)."""
+    T_loc, d = t_all.shape
+    T_pad = -(-T_loc // m)
+    idx = r * T_pad + jnp.arange(T_pad)
+    valid = idx < T_loc
+    t = jnp.take(t_all, jnp.minimum(idx, T_loc - 1), axis=0)
+    return jnp.where(valid[:, None], t, 0), valid, T_pad
+
+
+def _dispatch_slots(dst, n_dst: int, cap: int):
+    """Slot in the (n_dst · cap) send buffer per pair, -1 on overflow.
+    ``dst`` may contain the sentinel n_dst-1 for invalid pairs; the
+    sentinel bucket's slots are discarded by the caller."""
+    n = dst.shape[0]
+    order = jnp.argsort(dst)
+    sorted_dst = dst[order]
+    counts = jnp.bincount(dst, length=n_dst)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_group = jnp.arange(n) - starts[sorted_dst]
+    slot_sorted = jnp.where(pos_in_group < cap, sorted_dst * cap + pos_in_group, -1)
+    return jnp.zeros(n, jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+
+
+def _moe_ep_body(cfg: ArchConfig, t_all, router, wg, wu, wd, axis: str, cf: float):
+    """Manual region, expert-parallel path. t_all: (T_loc, d) replicated
+    over ``axis``; wg/wu/wd: this rank's (E/m, d, ffe) expert slices."""
+    e = cfg.moe
+    m = jax.lax.axis_size(axis)
+    r = jax.lax.axis_index(axis)
+    d = t_all.shape[-1]
+    k = e.top_k
+    e_per_rank = wg.shape[0]  # padded-E/m: pads are never routed to
+
+    t, tok_valid, T_pad = _my_tokens(t_all, m, r)
+    top_p, top_i = _route(cfg, t, router)  # (T_pad, k)
+
+    pairs_e = top_i.reshape(-1)
+    pair_valid = jnp.repeat(tok_valid, k)
+    dst = jnp.where(pair_valid, pairs_e // e_per_rank, m)  # sentinel bucket m
+    cap = max(-(-T_pad * k * int(cf * 4)) // (4 * m), 1)  # ceil(T_pad·k·cf/m)
+
+    slot = _dispatch_slots(dst, m + 1, cap)
+    slot = jnp.where((slot >= 0) & (slot < m * cap), slot, -1)
+    ok = slot >= 0
+    safe = jnp.where(ok, slot, 0)
+
+    t_pairs = jnp.repeat(t, k, axis=0)
+    send = jnp.zeros((m * cap, d), t.dtype).at[safe].add(jnp.where(ok[:, None], t_pairs, 0))
+    send_eid = jnp.full((m * cap,), e_per_rank, jnp.int32).at[safe].min(
+        jnp.where(ok, (pairs_e % e_per_rank).astype(jnp.int32), e_per_rank)
+    )
+
+    recv = jax.lax.all_to_all(send.reshape(m, cap, d), axis, 0, 0)
+    recv_eid = jax.lax.all_to_all(send_eid.reshape(m, cap), axis, 0, 0)
+    recv_flat = recv.reshape(m * cap, d)
+    eid_flat = recv_eid.reshape(m * cap)
+
+    order = jnp.argsort(eid_flat)  # pads (eid = e_per_rank) sort last
+    t_sorted = recv_flat[order]
+    group_sizes = jnp.bincount(eid_flat, length=e_per_rank + 1)[:e_per_rank].astype(jnp.int32)
+    y_sorted = _local_expert_mlp(cfg, t_sorted, group_sizes, wg, wu, wd)
+    processed = jnp.arange(m * cap) < group_sizes.sum()
+    y_sorted = jnp.where(processed[:, None], y_sorted, 0)
+    y_flat = jnp.zeros_like(y_sorted).at[order].set(y_sorted)
+
+    y_back = jax.lax.all_to_all(y_flat.reshape(m, cap, d), axis, 0, 0)
+    y_slots = y_back.reshape(m * cap, d)
+
+    y_pairs = jnp.where(ok[:, None], y_slots[safe], 0)
+    y_tok = jnp.einsum("tkd,tk->td", y_pairs.reshape(T_pad, k, d), top_p.astype(y_pairs.dtype))
+
+    out = jax.lax.all_gather(y_tok, axis, axis=0, tiled=True)  # (m·T_pad, d)
+    return out[: t_all.shape[0]]
+
+
+def _moe_repl_body(cfg: ArchConfig, t_all, router, wg, wu, wd, axis: str):
+    """Fallback: experts replicated, tokens split over ``axis``."""
+    e = cfg.moe
+    m = jax.lax.axis_size(axis)
+    r = jax.lax.axis_index(axis)
+    d = t_all.shape[-1]
+    k = e.top_k
+    t, tok_valid, T_pad = _my_tokens(t_all, m, r)
+    top_p, top_i = _route(cfg, t, router)
+    top_p = top_p * tok_valid[:, None]
+    flat_e = top_i.reshape(-1)
+    order = jnp.argsort(flat_e)
+    inv = jnp.argsort(order)
+    t_rep = jnp.repeat(t, k, axis=0)[order]
+    group_sizes = jnp.bincount(flat_e, length=wg.shape[0]).astype(jnp.int32)
+    y = _local_expert_mlp(cfg, t_rep, group_sizes, wg, wu, wd)
+    y = y[inv].reshape(T_pad, k, d)
+    y_tok = jnp.einsum("tkd,tk->td", y, top_p.astype(y.dtype))
+    out = jax.lax.all_gather(y_tok, axis, axis=0, tiled=True)
+    return out[: t_all.shape[0]]
+
+
+def moe_ep(cfg: ArchConfig, p: dict, x: jnp.ndarray, cf: float = 2.0) -> jnp.ndarray:
+    """Expert-parallel MoE over the active mesh. x: (B, S, d)."""
+    e = cfg.moe
+    B, S, d = x.shape
+    am = jax.sharding.get_abstract_mesh()
+    sizes = dict(zip(am.axis_names, am.axis_sizes))
+    manual = {
+        name for name, ty in zip(am.axis_names, am.axis_types)
+        if ty == jax.sharding.AxisType.Manual
+    }
+    m = sizes.get("model", 1)
+    batch_axes = tuple(
+        a for a in ("pod", "data")
+        if a in sizes and sizes[a] > 1 and a not in manual
+    )
+    btotal = 1
+    for a in batch_axes:
+        btotal *= sizes[a]
+    if B % btotal:
+        batch_axes = ()
+    bspec_entry = (
+        None if not batch_axes else (batch_axes[0] if len(batch_axes) == 1 else batch_axes)
+    )
+    from repro.models.init import padded_experts
+
+    ep = padded_experts(e.n_experts) % m == 0
+
+    # FSDP for the expert weights: stored with dim-1 sharded over
+    # "data" (348 GB of jamba expert params cannot live 16-way-sharded:
+    # 43 GB/dev — EXPERIMENTS.md §Perf P-efsdp). They are all-gathered
+    # over "data" per layer inside the manual region; the transpose
+    # (grads) is automatically a reduce-scatter.
+    dsize = sizes.get("data", 1)
+    fsdp = (
+        ep and not cfg.expert_weight_stationary
+        and "data" in batch_axes and d % dsize == 0 and e.d_ff_expert % dsize == 0
+    )
+
+    def body(x_loc, router, wg, wu, wd):
+        t_all = x_loc.reshape(-1, d)
+        if fsdp:
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=1, tiled=True)
+        if ep:
+            out = _moe_ep_body(cfg, t_all, router, wg, wu, wd, "model", cf)
+        else:
+            out = _moe_repl_body(cfg, t_all, router, wg, wu, wd, "model")
+        return out.reshape(x_loc.shape)
+
+    if ep:
+        wspec = P("model", "data") if fsdp else P("model")
+    else:
+        wspec = P()
+    smap = jax.shard_map(
+        body,
+        mesh=am,
+        axis_names=frozenset(batch_axes) | {"model"},
+        in_specs=(P(bspec_entry), P(), wspec, wspec, wspec),
+        out_specs=P(bspec_entry),
+        check_vma=False,
+    )
+    y = smap(x, p["router"].astype(x.dtype), p["w_gate_e"], p["w_up_e"], p["w_down_e"])
+
+    if e.n_shared:
+        sh = _act(cfg.mlp_act, x @ p["w_gate_sh"]) * (x @ p["w_up_sh"])
+        y = y + sh @ p["w_down_sh"]
+    return y

@@ -1,0 +1,118 @@
+"""Logical → physical sharding for the model zoo.
+
+Activations and parameters are annotated with *logical* dims; the rules
+table maps them to mesh axes (single-pod ("data", "model") or multi-pod
+("pod", "data", "model")). Annotations are no-ops when no mesh is
+active (single-device smoke tests).
+
+The paper's mesh semantics (DESIGN.md §2): "data" (+ "pod") is the
+FedAvg/row-team axis p_r — batch-parallel, τ-deferrable; "model" is the
+column axis p_c — exact parameter sharding, the n/p_c role.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# The active profile is set by the model entry points (forward /
+# decode_step) from cfg.sharding_profile; "dp" folds the model axis
+# into the batch dims and disables TP rules.
+_PROFILE = "tp"
+
+
+def set_profile(profile: str) -> None:
+    global _PROFILE
+    _PROFILE = profile
+
+
+RULES_DP: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data", "model"),
+    "cache_seq": ("model",),  # decode caches may still seq-shard
+    "vocab": ("model",),  # vocab-parallel head survives under dp
+    "d_inner": (),
+    None: (),
+}
+
+
+def _rules() -> dict[str, tuple[str, ...]]:
+    return RULES_DP if _PROFILE == "dp" else RULES
+
+
+# logical dim -> tuple of mesh axes (joined if several exist)
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),  # unsharded by default
+    "act_seq": ("model",),  # sequence-parallel residual stream (Megatron-SP)
+    "cache_seq": ("model",),  # KV-cache seq dim: sequence-parallel reads
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "embed": (),  # d_model replicated on the model axis
+    "embed_fsdp": ("data",),  # FSDP: weight-stationary dim over data
+    "experts": ("model",),
+    "d_inner": ("model",),  # mamba channel parallelism
+    "lora": (),
+    None: (),
+}
+
+
+def _active_axes() -> frozenset[str]:
+    """Mesh axes usable in with_sharding_constraint here: Auto/Explicit
+    only — axes that are Manual (inside an enclosing shard_map, e.g. the
+    hybrid-2D "pod" axis) cannot appear in a constraint."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return frozenset()
+    manual = {
+        name
+        for name, ty in zip(mesh.axis_names, mesh.axis_types)
+        if ty == jax.sharding.AxisType.Manual
+    }
+    return frozenset(mesh.axis_names) - manual
+
+
+def spec_for(*dims: str | None, axes: frozenset[str] | None = None) -> P:
+    """PartitionSpec for logical dims, filtered to the active mesh."""
+    active = _active_axes() if axes is None else axes
+    rules = _rules()
+    entries = []
+    for dim in dims:
+        axs = tuple(a for a in rules.get(dim, ()) if a in active)
+        if not axs:
+            entries.append(None)
+        elif len(axs) == 1:
+            entries.append(axs[0])
+        else:
+            entries.append(axs)
+    return P(*entries)
+
+
+def shard(x: jax.Array, *dims: str | None) -> jax.Array:
+    """with_sharding_constraint on logical dims; no-op without a mesh or
+    when a dim is not divisible by its axis size."""
+    active = _active_axes()
+    if not active:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    rules = _rules()
+    entries: list = []
+    used: set[str] = set()
+    for dim, size in zip(dims, x.shape):
+        axs = tuple(a for a in rules.get(dim, ()) if a in active and a not in used)
+        # greedy prefix: drop trailing axes until the dim divides
+        while axs:
+            total = 1
+            for a in axs:
+                total *= sizes[a]
+            if size % total == 0:
+                break
+            axs = axs[:-1]
+        if axs:
+            used.update(axs)
+            entries.append(axs[0] if len(axs) == 1 else axs)
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*entries))

@@ -1,0 +1,149 @@
+"""Decoder stack: scan-over-periods forward, KV/SSM-cache decode.
+
+Three entry points (what the launcher lowers):
+  forward(cfg, params, tokens, prefix_emb)        → logits (train/prefill)
+  init_cache(cfg, batch, max_len, dtype)          → decode cache pytree
+  decode_step(cfg, params, cache, tokens)         → (logits, cache)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.config import ArchConfig
+from repro.models.sharding import set_profile, shard
+
+
+def _apply_layer_train(p, cfg: ArchConfig, spec, x):
+    h = blocks.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        if spec.attn == "mla":
+            h = blocks.mla_train(p, cfg, spec, h)
+        else:
+            h = blocks.attn_train(p, cfg, spec, h)
+    else:
+        h = blocks.mamba_train(p, cfg, h)
+    x = x + h
+    if spec.ff != "none":
+        h = blocks.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        h = blocks.moe(p, cfg, h) if spec.ff == "moe" else blocks.mlp(p, cfg, h)
+        x = x + h
+    return x
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,  # (B, S_text) int32
+    prefix_emb: jnp.ndarray | None = None,  # (B, S_prefix, d) stub frontend
+    remat: bool = False,
+    last_only: bool = False,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence causal LM forward → logits (B, S_total, V).
+
+    ``remat``: activation-checkpoint at period granularity (training).
+    ``last_only``: head applied to the final position only (prefill —
+    avoids materializing (B, S, V) logits).
+    ``unroll``: unroll the period scan — used by the roofline lowering
+    so cost_analysis counts every layer (XLA counts a while body once;
+    see launch/roofline.py)."""
+    set_profile(cfg.sharding_profile)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb @ params["proj"], x], axis=1)
+    x = shard(x, "batch", None, None)
+
+    def period_fn(x, stacked):
+        for spec, p in zip(cfg.period, stacked):
+            x = _apply_layer_train(p, cfg, spec, x)
+        return x, None
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn)
+    x, _ = jax.lax.scan(period_fn, x, params["layers"], unroll=cfg.n_periods if unroll else 1)
+    x = blocks.rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if last_only:
+        return x[:, -1:, :] @ head
+    logits = x @ head
+    return shard(logits, "batch", None, "vocab")
+
+
+def lm_loss(
+    cfg: ArchConfig, params: dict, tokens, targets, mask=None, prefix_emb=None,
+    remat: bool = False, unroll: bool = False,
+) -> jnp.ndarray:
+    """Mean next-token cross entropy (f32 logits path)."""
+    logits = forward(cfg, params, tokens, prefix_emb, remat=remat, unroll=unroll)
+    if prefix_emb is not None:
+        logits = logits[:, prefix_emb.shape[1] :, :]
+    logits = shard(logits.astype(jnp.float32), "batch", None, "vocab")
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = shard(logz - gold, "batch", None)
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+# ------------------------------------------------------------- decode
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """Per-period-position stacked caches + position scalar."""
+    per_pos = []
+    for spec in cfg.period:
+        if spec.mixer == "attn":
+            if spec.attn == "mla":
+                one = blocks.init_mla_cache(cfg, batch, max_len, dtype)
+            else:
+                one = blocks.init_attn_cache(cfg, spec, batch, max_len, dtype)
+        else:
+            one = blocks.init_mamba_state(cfg, batch, dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), one
+        )
+        per_pos.append(stacked)
+    return {"layers": tuple(per_pos), "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(
+    cfg: ArchConfig, params: dict, cache: dict, tokens: jnp.ndarray,
+    unroll: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """One token per sequence: tokens (B, 1) → logits (B, 1, V)."""
+    set_profile(cfg.sharding_profile)
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def period_fn(x, scanned):
+        stacked_p, stacked_c = scanned
+        new_cs = []
+        for spec, p, c in zip(cfg.period, stacked_p, stacked_c):
+            h = blocks.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            if spec.mixer == "attn":
+                if spec.attn == "mla":
+                    h, c = blocks.mla_decode(p, cfg, spec, h, c, pos)
+                else:
+                    h, c = blocks.attn_decode(p, cfg, spec, h, c, pos)
+            else:
+                h, c = blocks.mamba_decode(p, cfg, h, c, pos)
+            x = x + h
+            if spec.ff != "none":
+                h = blocks.rmsnorm(p["ln2"], x, cfg.norm_eps)
+                h = blocks.moe(p, cfg, h) if spec.ff == "moe" else blocks.mlp(p, cfg, h)
+                x = x + h
+            new_cs.append(c)
+        return x, tuple(new_cs)
+
+    x, new_layers = jax.lax.scan(
+        period_fn, x, (params["layers"], cache["layers"]),
+        unroll=cfg.n_periods if unroll else 1,
+    )
+    x = blocks.rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, {"layers": new_layers, "pos": pos + 1}

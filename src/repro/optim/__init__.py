@@ -1,0 +1,20 @@
+"""Optimizers + the paper's hybrid 2D trainer for NN training."""
+
+from repro.optim.sgd import Optimizer, adamw, momentum, sgd
+from repro.optim.hybrid2d import (
+    HybridSchedule,
+    make_hybrid_train_step,
+    make_sync_step,
+    stack_for_pods,
+)
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "momentum",
+    "sgd",
+    "HybridSchedule",
+    "make_hybrid_train_step",
+    "make_sync_step",
+    "stack_for_pods",
+]

@@ -1,0 +1,122 @@
+"""Hybrid 2D training — the paper's HybridSGD mesh semantics applied to
+NN training (DESIGN.md §2 "Generalization to NN training").
+
+Axis mapping (the paper → this trainer):
+
+  row teams p_r   → the "pod" mesh axis: each pod is a FedAvg group.
+                    Parameters carry a leading n_pods dim sharded
+                    P("pod", ...); each pod trains on its local batch
+                    shard with NO cross-pod communication for τ steps.
+  column axis p_c → the "model" (+ FSDP "data") axes: exact sharded
+                    compute inside the pod; gradient/TP collectives stay
+                    on fast intra-pod ICI — the topology rule (Eq. 7).
+  τ sync          → sync_step(): parameter mean over the pod dim — one
+                    n/p_c-sized payload per rank over the slow DCI,
+                    amortized 1/τ, exactly the paper's column Allreduce.
+
+The s-step Gram identity is exact only for the convex core; here the
+row-team inner solver is plain local SGD (the FedAvg limit), which is
+the honest NN analogue (noted in DESIGN.md §4).
+
+Implementation: jax.shard_map with axis_names={"pod"} — the pod axis is
+manual (so per-pod params can drift, check_vma=False) while "data" and
+"model" stay auto-sharded (GSPMD inserts the intra-pod collectives).
+On a single-pod mesh this degenerates to standard 2D data×model
+training (n_pods = 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.sgd import Optimizer
+
+
+def _pod_axis(mesh) -> tuple[str | None, int]:
+    if "pod" in mesh.axis_names:
+        i = mesh.axis_names.index("pod")
+        return "pod", mesh.axis_sizes[i] if hasattr(mesh, "axis_sizes") else tuple(mesh.shape.values())[i]
+    return None, 1
+
+
+def stack_for_pods(params: Any, n_pods: int) -> Any:
+    """Give every pod its own replica: leading n_pods dim, P('pod', ...)."""
+    return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape), params)
+
+
+def make_hybrid_train_step(
+    mesh,
+    loss_fn: Callable[..., jnp.ndarray],  # loss_fn(params, *batch) -> scalar
+    opt: Optimizer,
+):
+    """Returns train_step((params_stacked, opt_state_stacked), *batch)
+    → ((params, opt_state), loss). Batch leading dim is global-batch,
+    sharded over ("pod", "data")."""
+    pod_name, n_pods = _pod_axis(mesh)
+
+    def local_step(params, opt_state, batch):
+        # inside shard_map over "pod": params have their leading pod dim
+        # sliced to 1 — squeeze, step locally, restore. The batch leaves
+        # arrive with dim0 already cut to this pod's share.
+        params = jax.tree.map(lambda p: p[0], params)
+        opt_state = jax.tree.map(lambda s: s[0], opt_state)
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        expand = lambda t: jax.tree.map(lambda x: x[None], t)
+        return expand(new_params), expand(new_state), loss[None]
+
+    if pod_name is None:
+        # single pod: ordinary jit step (GSPMD handles data/model axes)
+        def train_step(state, batch):
+            params, opt_state = state
+            loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            return (new_params, new_state), loss
+
+        return jax.jit(train_step, donate_argnums=(0,))
+
+    smapped = jax.shard_map(
+        local_step,
+        mesh=mesh,
+        axis_names=frozenset({"pod"}),
+        in_specs=(P("pod"), P("pod"), P("pod")),
+        out_specs=(P("pod"), P("pod"), P("pod")),
+        check_vma=False,
+    )
+
+    def train_step(state, batch):
+        params, opt_state = state
+        new_params, new_state, losses = smapped(params, opt_state, batch)
+        return (new_params, new_state), jnp.mean(losses)
+
+    return jax.jit(train_step, donate_argnums=(0,))
+
+
+def make_sync_step(mesh):
+    """The τ-deferred column Allreduce: average each parameter across
+    its pod replicas (one cross-DCI collective per τ local steps)."""
+    pod_name, n_pods = _pod_axis(mesh)
+    if pod_name is None:
+        return jax.jit(lambda params: params)
+
+    def sync(params):
+        return jax.tree.map(
+            lambda p: jnp.broadcast_to(jnp.mean(p, axis=0, keepdims=True), p.shape), params
+        )
+
+    return jax.jit(sync, donate_argnums=(0,))
+
+
+@dataclasses.dataclass
+class HybridSchedule:
+    """(s, b, τ) for the NN trainer: b is the per-pod batch; s maps to
+    gradient-accumulation microsteps (the inexact NN analogue of the
+    s-step bundle); τ is the pod-sync period."""
+
+    tau: int = 10
+    s: int = 1  # grad-accumulation microsteps per optimizer step

@@ -1,0 +1,69 @@
+"""Optimizers (pure pytree transforms — no external deps).
+
+The paper is an SGD paper: plain SGD and momentum-SGD are the defaults
+(and keep dry-run memory at 1-2× params). AdamW is provided for the LM
+examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        vel = jax.tree.map(lambda v, g: beta * v + g.astype(v.dtype), state, grads)
+        new = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, wd: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        bc1 = 1 - b1**t.astype(jnp.float32)
+        bc2 = 1 - b2**t.astype(jnp.float32)
+
+        def step(p, m, v):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return (p - lr * (upd + wd * p.astype(jnp.float32))).astype(p.dtype)
+
+        new = jax.tree.map(step, params, mu, nu)
+        return new, {"mu": mu, "nu": nu, "t": t}
+
+    return Optimizer(init, update)

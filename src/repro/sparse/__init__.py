@@ -1,0 +1,46 @@
+"""Sparse-matrix substrate: host CSR, device ELL/BSR, partitioners, data.
+
+The paper's workloads are sparse (A in R^{m x n}, CSR on the host). On
+TPU we re-block into dense tiles (BSR) for the MXU or pad to ELL for the
+pure-jnp path; both are produced from the host CSR here.
+"""
+
+from repro.sparse.csr import CSRMatrix, csr_from_dense, csr_matvec, csr_rmatvec
+from repro.sparse.ell import EllBlock, ell_from_csr, ell_matvec, ell_rmatvec
+from repro.sparse.bsr import BsrMatrix, bsr_from_csr, bsr_matvec_ref
+from repro.sparse.partition import (
+    ColumnPartition,
+    partition_columns,
+    partition_rows,
+    partition_2d,
+    partition_stats,
+)
+from repro.sparse.synthetic import (
+    DATASET_STATS,
+    SyntheticDataset,
+    make_dataset,
+    make_skewed_csr,
+)
+
+__all__ = [
+    "CSRMatrix",
+    "csr_from_dense",
+    "csr_matvec",
+    "csr_rmatvec",
+    "EllBlock",
+    "ell_from_csr",
+    "ell_matvec",
+    "ell_rmatvec",
+    "BsrMatrix",
+    "bsr_from_csr",
+    "bsr_matvec_ref",
+    "ColumnPartition",
+    "partition_columns",
+    "partition_rows",
+    "partition_2d",
+    "partition_stats",
+    "DATASET_STATS",
+    "SyntheticDataset",
+    "make_dataset",
+    "make_skewed_csr",
+]

@@ -1,0 +1,126 @@
+"""Block-sparse (BSR) tiles — the TPU-native sparse format.
+
+TPUs have no efficient scalar gather; the MKL-CSR SpMV the paper uses
+does not map to the MXU. The TPU-idiomatic adaptation (DESIGN.md §2) is
+to re-block A into dense (bm × bn) tiles, keep only tiles containing
+nonzeros, and drive a Pallas kernel whose block-column indices are
+scalar-prefetched. Rows of tiles are padded to the max tile count per
+block-row (ELL-of-tiles) so the grid is static.
+
+The dense tiles land on the MXU; sparsity is exploited at tile
+granularity. Tile shape defaults to (8, 128) — the VPU/MXU native lane
+layout for f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+
+@dataclasses.dataclass
+class BsrMatrix:
+    """ELL-of-tiles block-sparse matrix.
+
+    tiles:      (n_block_rows, max_blocks, bm, bn) dense tile data
+    block_cols: (n_block_rows, max_blocks) int32 — block-column index of
+                each tile; padded entries point at block 0 with zero data.
+    nblocks:    (n_block_rows,) int32 — valid tile count per block row.
+    shape:      padded dense shape (rows = n_block_rows*bm, cols =
+                n_block_cols*bn); logical_shape is the original (m, n).
+    """
+
+    tiles: jnp.ndarray
+    block_cols: jnp.ndarray
+    nblocks: jnp.ndarray
+    shape: tuple[int, int]
+    logical_shape: tuple[int, int]
+
+    @property
+    def bm(self) -> int:
+        return int(self.tiles.shape[2])
+
+    @property
+    def bn(self) -> int:
+        return int(self.tiles.shape[3])
+
+    @property
+    def n_block_rows(self) -> int:
+        return int(self.tiles.shape[0])
+
+    @property
+    def max_blocks(self) -> int:
+        return int(self.tiles.shape[1])
+
+    @property
+    def density(self) -> float:
+        """Fraction of tiles stored vs a fully dense tiling."""
+        total = self.n_block_rows * (self.shape[1] // self.bn)
+        return float(np.sum(np.asarray(self.nblocks))) / max(total, 1)
+
+
+def bsr_from_csr(a: CSRMatrix, bm: int = 8, bn: int = 128, dtype=jnp.float32) -> BsrMatrix:
+    m_pad = -(-a.m // bm) * bm
+    n_pad = -(-a.n // bn) * bn
+    n_brows, n_bcols = m_pad // bm, n_pad // bn
+    # bucket nonzeros by (block_row, block_col)
+    row_ids = np.repeat(np.arange(a.m), a.nnz_per_row)
+    br = row_ids // bm
+    bc = a.indices // bn
+    key = br.astype(np.int64) * n_bcols + bc
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    uniq, starts = np.unique(key_s, return_index=True)
+    starts = np.append(starts, len(key_s))
+
+    per_row_blocks: list[list[tuple[int, np.ndarray]]] = [[] for _ in range(n_brows)]
+    for u_i, k in enumerate(uniq):
+        blk_r, blk_c = int(k // n_bcols), int(k % n_bcols)
+        sel = order[starts[u_i] : starts[u_i + 1]]
+        tile = np.zeros((bm, bn), dtype=np.float64)
+        tile[row_ids[sel] - blk_r * bm, a.indices[sel] - blk_c * bn] = a.data[sel]
+        per_row_blocks[blk_r].append((blk_c, tile))
+
+    max_blocks = max((len(b) for b in per_row_blocks), default=0) or 1
+    tiles = np.zeros((n_brows, max_blocks, bm, bn), dtype=np.float64)
+    block_cols = np.zeros((n_brows, max_blocks), dtype=np.int32)
+    nblocks = np.zeros(n_brows, dtype=np.int32)
+    for r, blks in enumerate(per_row_blocks):
+        nblocks[r] = len(blks)
+        for j, (c, tile) in enumerate(blks):
+            tiles[r, j] = tile
+            block_cols[r, j] = c
+    return BsrMatrix(
+        tiles=jnp.asarray(tiles, dtype=dtype),
+        block_cols=jnp.asarray(block_cols),
+        nblocks=jnp.asarray(nblocks),
+        shape=(m_pad, n_pad),
+        logical_shape=(a.m, a.n),
+    )
+
+
+def bsr_to_dense(bsr: BsrMatrix) -> np.ndarray:
+    out = np.zeros(bsr.shape, dtype=np.asarray(bsr.tiles).dtype)
+    tiles = np.asarray(bsr.tiles)
+    bcols = np.asarray(bsr.block_cols)
+    nb = np.asarray(bsr.nblocks)
+    for r in range(bsr.n_block_rows):
+        for j in range(int(nb[r])):
+            c = int(bcols[r, j])
+            out[r * bsr.bm : (r + 1) * bsr.bm, c * bsr.bn : (c + 1) * bsr.bn] += tiles[r, j]
+    return out[: bsr.logical_shape[0], : bsr.logical_shape[1]]
+
+
+def bsr_matvec_ref(bsr: BsrMatrix, x: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle: y = A @ x on the padded shape, truncated to m."""
+    n_pad = bsr.shape[1]
+    x_pad = jnp.zeros(n_pad, x.dtype).at[: x.shape[0]].set(x)
+    x_blocks = x_pad.reshape(-1, bsr.bn)  # (n_bcols, bn)
+    gathered = jnp.take(x_blocks, bsr.block_cols, axis=0)  # (nbr, maxb, bn)
+    valid = (jnp.arange(bsr.max_blocks)[None, :] < bsr.nblocks[:, None]).astype(x.dtype)
+    y_blocks = jnp.einsum("rjab,rjb->ra", bsr.tiles * valid[:, :, None, None], gathered)
+    return y_blocks.reshape(-1)[: bsr.logical_shape[0]]

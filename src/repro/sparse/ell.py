@@ -1,0 +1,91 @@
+"""Padded ELL device format and pure-jnp sparse matvec/rmatvec.
+
+ELL pads every row to the same nonzero count so shapes are static —
+required for jit/SPMD. Padding uses column 0 with value 0. The padded
+width is the *global max* across SPMD shards so all ranks share one
+shape; this is exactly where the paper's κ imbalance turns into padded
+compute on TPU (DESIGN.md §5.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EllBlock:
+    """One local sparse block in padded-ELL layout.
+
+    indices: (rows, width) int32 column ids (0 where padded)
+    values:  (rows, width) float (0 where padded)
+    n:       local column count (for rmatvec output length)
+    """
+
+    indices: jnp.ndarray
+    values: jnp.ndarray
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def rows(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def width(self) -> int:
+        return int(self.indices.shape[1])
+
+
+def ell_from_csr(a: CSRMatrix, width: int | None = None, dtype=jnp.float32) -> EllBlock:
+    counts = a.nnz_per_row
+    w = int(counts.max()) if counts.size and width is None else int(width or 0)
+    w = max(w, 1)
+    idx = np.zeros((a.m, w), dtype=np.int32)
+    val = np.zeros((a.m, w), dtype=np.float64)
+    for i in range(a.m):
+        lo, hi = int(a.indptr[i]), int(a.indptr[i + 1])
+        k = hi - lo
+        if k > w:
+            raise ValueError(f"row {i} has {k} nnz > ELL width {w}")
+        idx[i, :k] = a.indices[lo:hi]
+        val[i, :k] = a.data[lo:hi]
+    return EllBlock(indices=jnp.asarray(idx), values=jnp.asarray(val, dtype=dtype), n=a.n)
+
+
+def ell_matvec(ell: EllBlock, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x, y: (rows,). Gather + row-sum; pads contribute 0."""
+    gathered = jnp.take(x, ell.indices, axis=0)  # (rows, width)
+    return jnp.sum(ell.values * gathered, axis=1)
+
+
+def ell_matmat(ell: EllBlock, x: jnp.ndarray) -> jnp.ndarray:
+    """Y = A @ X for X: (n, k) — used by the s-step bundle."""
+    gathered = jnp.take(x, ell.indices, axis=0)  # (rows, width, k)
+    return jnp.einsum("rw,rwk->rk", ell.values, gathered)
+
+
+def ell_rmatvec(ell: EllBlock, u: jnp.ndarray) -> jnp.ndarray:
+    """g = A.T @ u, g: (n,). Scatter-add of u-weighted values."""
+    contrib = (ell.values * u[:, None]).reshape(-1)
+    flat_idx = ell.indices.reshape(-1)
+    return jnp.zeros(ell.n, dtype=contrib.dtype).at[flat_idx].add(contrib)
+
+
+def ell_rmatmat(ell: EllBlock, u: jnp.ndarray) -> jnp.ndarray:
+    """G = A.T @ U for U: (rows, k)."""
+    contrib = ell.values[:, :, None] * u[:, None, :]  # (rows, width, k)
+    flat_idx = ell.indices.reshape(-1)
+    return (
+        jnp.zeros((ell.n, u.shape[1]), dtype=contrib.dtype)
+        .at[flat_idx]
+        .add(contrib.reshape(-1, u.shape[1]))
+    )
+
+
+def ell_row_slice(ell: EllBlock, r0: int, r1: int) -> EllBlock:
+    return EllBlock(indices=ell.indices[r0:r1], values=ell.values[r0:r1], n=ell.n)

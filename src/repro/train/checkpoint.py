@@ -1,0 +1,56 @@
+"""Checkpointing: flat-npz save/restore of arbitrary pytrees.
+
+No external deps (no orbax): the tree is flattened with '/'-joined key
+paths into a single .npz plus a small JSON manifest for the treedef.
+Atomic via write-to-temp + rename.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str | os.PathLike, tree, step: int) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp.npz")
+    flat = _flatten(tree)
+    np.savez(tmp, **flat)
+    manifest = {"step": step, "keys": sorted(flat)}
+    tmp_manifest = path.with_suffix(".tmp.json")
+    tmp_manifest.write_text(json.dumps(manifest))
+    os.replace(tmp, path.with_suffix(".npz"))
+    os.replace(tmp_manifest, path.with_suffix(".json"))
+
+
+def restore_checkpoint(path: str | os.PathLike, tree_like):
+    """Restore into the structure of ``tree_like``; returns (tree, step)
+    or (None, 0) if absent."""
+    path = Path(path)
+    npz, manifest = path.with_suffix(".npz"), path.with_suffix(".json")
+    if not npz.exists() or not manifest.exists():
+        return None, 0
+    data = np.load(npz)
+    meta = json.loads(manifest.read_text())
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    new_leaves = []
+    for path_elems, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"checkpoint shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta["step"]

@@ -1,0 +1,103 @@
+"""Training loop driver (used by examples/ and launch/train.py).
+
+Wires: config → params → hybrid-2D train step (the paper's technique:
+τ local steps per pod, then a parameter-averaging sync) → data stream →
+metrics → checkpoints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.init import init_params
+from repro.models.transformer import lm_loss
+from repro.optim.hybrid2d import make_hybrid_train_step, make_sync_step, stack_for_pods
+from repro.optim.sgd import Optimizer, adamw
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.data import MarkovTextStream
+
+
+@dataclasses.dataclass
+class TrainReport:
+    losses: list[float]
+    steps: int
+    tokens_per_s: float
+
+
+def train(
+    cfg: ArchConfig,
+    steps: int = 100,
+    batch: int = 8,
+    seq_len: int = 128,
+    tau: int = 10,
+    mesh=None,
+    opt: Optimizer | None = None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 0,
+    log_every: int = 10,
+    seed: int = 0,
+    dtype=jnp.float32,
+) -> TrainReport:
+    """Train cfg on the synthetic Markov stream. With a multi-pod mesh
+    this runs the full hybrid-2D schedule (pod-local steps + τ-sync)."""
+    opt = opt or adamw(3e-4)
+    params = init_params(cfg, jax.random.PRNGKey(seed), dtype=dtype)
+    opt_state = opt.init(params)
+
+    n_pods = 1
+    if mesh is not None and "pod" in mesh.axis_names:
+        n_pods = dict(zip(mesh.axis_names, mesh.axis_sizes))["pod"]
+
+    def loss_fn(p, tokens, targets):
+        return lm_loss(cfg, p, tokens, targets)
+
+    if mesh is not None:
+        train_step = make_hybrid_train_step(mesh, loss_fn, opt)
+        sync_step = make_sync_step(mesh)
+        if n_pods > 1:
+            params = stack_for_pods(params, n_pods)
+            opt_state = stack_for_pods(opt_state, n_pods)
+        state = (params, opt_state)
+    else:
+
+        @jax.jit
+        def train_step(state, batch_):
+            p, s = state
+            loss, g = jax.value_and_grad(loss_fn)(p, *batch_)
+            p, s = opt.update(g, s, p)
+            return (p, s), loss
+
+        sync_step = lambda p: p
+        state = (params, opt_state)
+
+    stream = MarkovTextStream(cfg.vocab_size, seed=seed)
+    it = stream.batches(batch, seq_len)
+
+    start, step0 = None, 0
+    if checkpoint_dir:
+        restored, step0 = restore_checkpoint(Path(checkpoint_dir) / "ckpt", state)
+        if restored is not None:
+            state = jax.tree.map(jnp.asarray, restored)
+
+    losses: list[float] = []
+    t0 = time.time()
+    for step in range(step0, steps):
+        tokens, targets = next(it)
+        state, loss = train_step(state, (jnp.asarray(tokens), jnp.asarray(targets)))
+        if n_pods > 1 and tau and (step + 1) % tau == 0:
+            p, s = state
+            state = (sync_step(p), s)
+        if (step + 1) % log_every == 0 or step == steps - 1:
+            losses.append(float(loss))
+        if checkpoint_dir and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            save_checkpoint(Path(checkpoint_dir) / "ckpt", state, step + 1)
+    if start is None:
+        elapsed = max(time.time() - t0, 1e-9)
+    tokens_per_s = (steps - step0) * batch * seq_len / elapsed
+    return TrainReport(losses=losses, steps=steps, tokens_per_s=tokens_per_s)

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: do NOT set XLA_FLAGS device-count here — smoke
+tests and benches must see the real single CPU device; multi-device
+tests run in subprocesses (test_distributed_subprocess.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_problem():
+    """A small skewed logistic problem shared across solver tests."""
+    from repro.sparse.synthetic import make_skewed_csr
+
+    rng = np.random.default_rng(0)
+    a = make_skewed_csr(256, 128, 12, 0.8, seed=3)
+    y = np.where(rng.random(256) < 0.5, 1.0, -1.0)
+    return a, y
+
+
+@pytest.fixture(scope="session")
+def skewed_csr():
+    from repro.sparse.synthetic import make_skewed_csr
+
+    return make_skewed_csr(400, 600, 20, 1.0, seed=7)

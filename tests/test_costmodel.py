@@ -1,0 +1,253 @@
+"""Cost model validation — the paper's own tables are the oracle.
+
+V5  Topology rule reproduces paper Table 4 on all four rows.
+V4  Refined predictor reproduces the partitioner ranking on all 9
+    (dataset × partitioner) cells (paper §6.5 Validation / Fig 4).
+V6  Crossover: hybrid ≪ FedAvg per-sample on url; FedAvg < hybrid on
+    dense epsilon (paper Table 11 regime boundary).
+V7  Regime analysis + bandwidth-balance behaviour (Table 5).
+Plus hypothesis property tests: corner limits and convexity of s*.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.costmodel import (
+    PERLMUTTER,
+    TPU_V5E,
+    HybridConfig,
+    PartitionerProfile,
+    b_star,
+    bandwidth_balance,
+    classify_regime,
+    fedavg_epoch_cost,
+    grid_search_config,
+    hybrid_epoch_cost,
+    per_sample_costs,
+    rank_partitioners,
+    s_star,
+    sstep_epoch_cost,
+    topology_rule,
+    cache_term_binding,
+)
+from repro.sparse.synthetic import DATASET_STATS
+
+
+# ---------------- V5: topology rule (paper Table 4) ----------------
+
+@pytest.mark.parametrize(
+    "dataset,p,expected",
+    [
+        ("url", 256, (4, 64)),
+        ("synthetic_uniform", 128, (2, 64)),
+        ("news20", 64, (1, 64)),
+        ("rcv1", 16, (1, 16)),
+    ],
+)
+def test_topology_rule_reproduces_table4(dataset, p, expected):
+    stats = DATASET_STATS[dataset]
+    assert topology_rule(p, stats.n, PERLMUTTER) == expected
+
+
+def test_cache_term_nonbinding_on_libsvm():
+    """Paper: n·w ≤ R·L_cap = 64 MB on every LIBSVM dataset."""
+    for name in ("url", "news20", "rcv1", "epsilon"):
+        assert not cache_term_binding(DATASET_STATS[name].n, PERLMUTTER)
+
+
+def test_cache_term_binds_on_huge_n():
+    """A hypothetical n·w > R·L_cap must push p_c above R."""
+    n = 2 * PERLMUTTER.ranks_per_domain * PERLMUTTER.l_cap // PERLMUTTER.word_bytes
+    assert cache_term_binding(n, PERLMUTTER)
+    p_r, p_c = topology_rule(1024, n, PERLMUTTER)
+    assert p_c > PERLMUTTER.ranks_per_domain
+
+
+# ------- V4: partitioner ranking on all 9 measured cells (Table 9) -------
+
+TABLE9 = {
+    # dataset: (n, zbar, mesh, profiles with measured κ / max n_local)
+    "url": (
+        3_231_961, 116, (4, 64),
+        [
+            PartitionerProfile("rows", 33.83, 50_499),
+            PartitionerProfile("nnz", 1.31, 1_409_992),
+            PartitionerProfile("cyclic", 1.91, 50_499),
+        ],
+        ["cyclic", "rows", "nnz"],  # paper's measured order (ms/iter)
+    ),
+    "news20": (
+        1_355_191, 455, (1, 64),
+        [
+            PartitionerProfile("rows", 18.73, 21_174),
+            PartitionerProfile("nnz", 1.05, 59_103),
+            PartitionerProfile("cyclic", 1.18, 21_174),
+        ],
+        # Paper §6.5: "On url and news20 the predicted ranking is
+        # cyclic < rows < nnz". (Table 9's *measured* news20 order is
+        # cyclic < nnz < rows — the paper's text and table disagree; we
+        # assert the paper's stated model prediction, which our model
+        # reproduces, and record the discrepancy in EXPERIMENTS.md.)
+        ["cyclic", "rows", "nnz"],
+    ),
+    "rcv1": (
+        47_236, 74, (1, 16),
+        [
+            PartitionerProfile("rows", 1.62, 2_952),
+            PartitionerProfile("nnz", 1.01, 4_333),
+            PartitionerProfile("cyclic", 1.01, 2_952),
+        ],
+        ["cyclic", "rows", "nnz"],  # all tied within 5-7%
+    ),
+}
+
+
+@pytest.mark.parametrize("dataset", list(TABLE9))
+def test_partitioner_ranking_matches_paper(dataset):
+    n, zbar, (p_r, p_c), profiles, order = TABLE9[dataset]
+    ranked = rank_partitioners(n, zbar, profiles, p_r, p_c, 4, 32, 10, PERLMUTTER)
+    got = [nm for nm, _ in ranked]
+    if dataset == "rcv1":
+        # paper: tied within 5% predicted and measured — assert the tie
+        times = [bd.total for _, bd in ranked]
+        assert max(times) / min(times) < 1.10
+        assert got[0] == "cyclic"
+    else:
+        assert got == order, f"{dataset}: predicted {got}, paper {order}"
+
+
+def test_winner_is_cyclic_everywhere_sparse():
+    """Paper headline: cyclic is the consistent winner on skewed data."""
+    for dataset, (n, zbar, (p_r, p_c), profiles, _) in TABLE9.items():
+        ranked = rank_partitioners(n, zbar, profiles, p_r, p_c, 4, 32, 10, PERLMUTTER)
+        assert ranked[0][0] == "cyclic", dataset
+
+
+# ---------------- V6: solver crossover (Table 11) ----------------
+
+def test_crossover_url_vs_epsilon():
+    url = DATASET_STATS["url"]
+    hyb = per_sample_costs("hybrid", url.m, url.n, url.zbar, 256, 4, 32, 10, PERLMUTTER, 4, 64)
+    fed = per_sample_costs("fedavg", url.m, url.n, url.zbar, 256, 1, 32, 10, PERLMUTTER)
+    assert sum(fed.values()) > 10 * sum(hyb.values()), "url: hybrid must win big"
+
+    eps = DATASET_STATS["epsilon"]
+    hyb = per_sample_costs("hybrid", eps.m, eps.n, eps.zbar, 512, 4, 32, 10, PERLMUTTER, 1, 512)
+    fed = per_sample_costs("fedavg", eps.m, eps.n, eps.zbar, 32, 1, 32, 10, PERLMUTTER)
+    assert sum(fed.values()) < sum(hyb.values()), "epsilon: FedAvg must win"
+
+
+# ---------------- V7: regimes & bandwidth balance ----------------
+
+def test_url_is_communication_bound():
+    st_ = DATASET_STATS["url"]
+    r = classify_regime(st_.m, st_.n, st_.zbar, HybridConfig(4, 64, 4, 32, 10), PERLMUTTER)
+    assert r.name in ("gram_bw", "sync_bw", "latency")
+
+
+def test_balance_separates_regimes():
+    """Above the balance ⇒ Gram-BW dominates comm; below ⇒ sync-BW."""
+    n = 3_231_961
+    hi = HybridConfig(4, 64, 16, 64, 16)  # large s·b·τ·p_c
+    lo = HybridConfig(4, 64, 2, 8, 2)
+    assert bandwidth_balance(hi.s, hi.b, hi.tau, hi.p_c, n) > 1
+    assert bandwidth_balance(lo.s, lo.b, lo.tau, lo.p_c, n) < 1
+    cb_hi = hybrid_epoch_cost(2_396_130, n, 116, hi, PERLMUTTER)
+    cb_lo = hybrid_epoch_cost(2_396_130, n, 116, lo, PERLMUTTER)
+    assert cb_hi.gram_bw > cb_hi.sync_bw
+    assert cb_lo.sync_bw > cb_lo.gram_bw
+
+
+# ---------------- corner limits (Eq. 4 subsumes Table 3) ----------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    s=st.sampled_from([1, 2, 4, 8]),
+    b=st.sampled_from([8, 32, 128]),
+    p=st.sampled_from([16, 64, 256]),
+)
+def test_sstep_limit(s, b, p):
+    """p_r=1, τ→∞: Eq. (4) reduces to the 1D s-step cost."""
+    m, n, zbar = 100_000, 500_000, 100
+    cb = sstep_epoch_cost(m, n, zbar, s, b, p, PERLMUTTER)
+    big_tau = 10**9
+    full = hybrid_epoch_cost(m, n, zbar, HybridConfig(1, p, s, b, big_tau), PERLMUTTER)
+    assert math.isclose(cb.compute, full.compute, rel_tol=1e-9)
+    assert math.isclose(cb.gram_bw, full.gram_bw, rel_tol=1e-9)
+    assert full.sync_bw < cb.total * 1e-6  # vanishes
+    assert math.isclose(cb.latency, full.latency, rel_tol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.sampled_from([8, 32, 128]), tau=st.sampled_from([1, 5, 10]), p=st.sampled_from([16, 64, 256]))
+def test_fedavg_limit(b, tau, p):
+    """p_r=p, p_c=1, s=1: Eq. (4) reduces to the FedAvg cost."""
+    m, n, zbar = 100_000, 500_000, 100
+    cb = fedavg_epoch_cost(m, n, zbar, b, tau, p, PERLMUTTER)
+    full = hybrid_epoch_cost(m, n, zbar, HybridConfig(p, 1, 1, b, tau), PERLMUTTER)
+    assert math.isclose(cb.compute, full.compute, rel_tol=0.25)  # 6z̄+2b vs 4z̄+2n/b differ by design
+    assert full.gram_bw == 0.0
+    assert math.isclose(cb.sync_bw, full.sync_bw, rel_tol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([8, 16, 32, 64]),
+    tau=st.sampled_from([5, 10, 20]),
+    p_r=st.sampled_from([1, 2, 4]),
+    p_c=st.sampled_from([16, 64]),
+)
+def test_s_star_minimizes(b, tau, p_r, p_c):
+    """s* (Eq. 5) must beat every integer s on the Eq. (4) objective
+    (evaluated at fixed γ/β as in the derivation)."""
+    m, n, zbar = 500_000, 1_000_000, 100
+    opt = s_star(b, tau, p_r, p_c, n, PERLMUTTER)
+    gamma = PERLMUTTER.gamma_flop(n * PERLMUTTER.word_bytes / p_c)
+
+    def T(s):
+        return hybrid_epoch_cost(
+            m, n, zbar, HybridConfig(p_r, p_c, s, b, tau), PERLMUTTER, gamma=gamma
+        ).total
+
+    t_opt = min(T(max(int(opt), 1)), T(int(opt) + 1))
+    for s in (1, 2, 4, 8, 16, 32, 64):
+        assert t_opt <= T(s) * 1.02
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([2, 4, 8]),
+    tau=st.sampled_from([5, 10, 20]),
+    p_c=st.sampled_from([16, 64]),
+)
+def test_b_star_minimizes(s, tau, p_c):
+    m, n, zbar = 500_000, 1_000_000, 100
+    p_r = 4
+    opt = b_star(s, tau, p_r, p_c, n, PERLMUTTER)
+    gamma = PERLMUTTER.gamma_flop(n * PERLMUTTER.word_bytes / p_c)
+
+    def T(b):
+        return hybrid_epoch_cost(
+            m, n, zbar, HybridConfig(p_r, p_c, s, b, tau), PERLMUTTER, gamma=gamma
+        ).total
+
+    t_opt = min(T(max(int(opt), 1)), T(int(opt) + 1))
+    for b in (1, 4, 16, 64, 256, 1024):
+        assert t_opt <= T(b) * 1.02
+
+
+def test_grid_search_returns_valid_config():
+    st_ = DATASET_STATS["url"]
+    cfg, cb = grid_search_config(st_.m, st_.n, st_.zbar, 4, 64, PERLMUTTER)
+    assert cfg.tau >= cfg.s and cfg.tau % cfg.s == 0
+    assert cb.total > 0
+
+
+def test_tpu_machine_topology():
+    """On the TPU machine the domain is a 256-chip pod: the rule keeps
+    the frequent axis intra-pod."""
+    p_r, p_c = topology_rule(512, 3_231_961, TPU_V5E)
+    assert p_c <= TPU_V5E.ranks_per_domain
+    assert p_r * p_c == 512

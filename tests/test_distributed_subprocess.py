@@ -1,0 +1,118 @@
+"""Multi-device shard_map equivalence — runs in a subprocess so that
+XLA_FLAGS=--xla_force_host_platform_device_count is set before jax
+initializes, without polluting the main test process (which must see
+exactly one device)."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_in_subprocess(body: str, devices: int = 8) -> str:
+    code = textwrap.dedent(body)
+    env = {
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+        "PYTHONPATH": str(REPO / "src"),
+        "PATH": "/usr/bin:/bin:/usr/local/bin",
+        "JAX_PLATFORMS": "cpu",
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=600
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.parametrize("partitioner", ["cyclic", "rows", "nnz"])
+@pytest.mark.parametrize("mesh_shape", [(2, 4), (4, 2), (1, 8), (8, 1)])
+def test_hybrid_distributed_matches_simulated(partitioner, mesh_shape):
+    p_r, p_c = mesh_shape
+    out = run_in_subprocess(
+        f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.sparse.synthetic import make_skewed_csr
+        from repro.core.teams import stack_row_teams
+        from repro.core.hybrid import run_hybrid_sgd
+        from repro.core.distributed import build_2d_problem, run_hybrid_distributed
+
+        rng = np.random.default_rng(0)
+        A = make_skewed_csr(256, 100, 12, 0.8, seed=3)
+        y = np.where(rng.random(256) < 0.5, 1.0, -1.0)
+        s, b, tau, eta, rounds = 2, 4, 8, 0.05, 3
+        p_r, p_c = {p_r}, {p_c}
+        mesh = jax.make_mesh((p_r, p_c), ("rows", "cols"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        tp = stack_row_teams(A, y, p_r, row_multiple=s * b)
+        x_sim, _ = run_hybrid_sgd(tp, jnp.zeros(100), s, b, eta, tau, rounds)
+        prob, cp = build_2d_problem(A, y, p_r, p_c, "{partitioner}", row_multiple=s * b)
+        x_dist = run_hybrid_distributed(mesh, prob, cp, np.zeros(100, np.float32),
+                                        s, b, eta, tau, rounds)
+        diff = float(np.abs(np.asarray(x_sim) - x_dist).max())
+        assert diff < 1e-5, diff
+        print("OK", diff)
+        """
+    )
+    assert "OK" in out
+
+
+def test_distributed_fedavg_corner():
+    """p_c=1, s=1 mesh executes FedAvg; cross-check against run_fedavg."""
+    out = run_in_subprocess(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.sparse.synthetic import make_skewed_csr
+        from repro.core.teams import stack_row_teams
+        from repro.core.fedavg import run_fedavg
+        from repro.core.distributed import build_2d_problem, run_hybrid_distributed
+
+        rng = np.random.default_rng(0)
+        A = make_skewed_csr(256, 100, 12, 0.8, seed=3)
+        y = np.where(rng.random(256) < 0.5, 1.0, -1.0)
+        b, tau, eta, rounds = 4, 8, 0.05, 3
+        mesh = jax.make_mesh((8, 1), ("rows", "cols"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        tp = stack_row_teams(A, y, 8, row_multiple=b)
+        x_f, _ = run_fedavg(tp, jnp.zeros(100), b, eta, tau, rounds)
+        prob, cp = build_2d_problem(A, y, 8, 1, "rows", row_multiple=b)
+        x_d = run_hybrid_distributed(mesh, prob, cp, np.zeros(100, np.float32),
+                                     1, b, eta, tau, rounds)
+        diff = float(np.abs(np.asarray(x_f) - x_d).max())
+        assert diff < 1e-5, diff
+        print("OK", diff)
+        """
+    )
+    assert "OK" in out
+
+
+def test_x64_strict_sstep_identity():
+    """With float64 the s-step identity holds to ~1e-12 (paper runs
+    FP64 for Gram conditioning)."""
+    out = run_in_subprocess(
+        """
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np, jax.numpy as jnp
+        from repro.sparse.synthetic import make_skewed_csr
+        from repro.core.problem import make_problem
+        from repro.core.sgd import run_sgd
+        from repro.core.sstep import run_sstep_sgd
+
+        rng = np.random.default_rng(0)
+        A = make_skewed_csr(256, 128, 12, 0.8, seed=3)
+        y = np.where(rng.random(256) < 0.5, 1.0, -1.0)
+        prob = make_problem(A, y, row_multiple=64, dtype=jnp.float64)
+        x0 = jnp.zeros(128, jnp.float64)
+        x_sgd, _ = run_sgd(prob, x0, 8, 0.05, 64)
+        x_ss, _ = run_sstep_sgd(prob, x0, 8, 8, 0.05, 64)
+        diff = float(jnp.abs(x_sgd - x_ss).max())
+        assert diff < 1e-12, diff
+        print("OK", diff)
+        """,
+        devices=1,
+    )
+    assert "OK" in out

@@ -1,0 +1,128 @@
+"""Launch-layer units: input shapes, applicability, roofline parser."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.launch.input_specs import SHAPES, resolve_config, shape_applicable
+from repro.launch.roofline import (
+    RooflineTerms,
+    extrapolate_depth,
+    model_flops_per_step,
+    parse_collectives,
+    _shape_bytes,
+)
+
+
+def test_shapes_registry():
+    assert SHAPES["train_4k"].seq_len == 4_096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32_768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32_768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_long500k_applicability():
+    runs = {
+        a: shape_applicable(resolve_config(a, SHAPES["long_500k"]), SHAPES["long_500k"])[0]
+        for a in REGISTRY
+    }
+    assert runs["falcon-mamba-7b"] and runs["jamba-1.5-large-398b"] and runs["mistral-nemo-12b"]
+    for a in ("gemma-2b", "granite-34b", "qwen2.5-3b", "musicgen-medium",
+              "llava-next-mistral-7b", "deepseek-v2-lite-16b", "granite-moe-3b-a800m"):
+        assert not runs[a], a
+
+
+def test_mistral_nemo_swa_overlay():
+    cfg = resolve_config("mistral-nemo-12b", SHAPES["long_500k"])
+    assert cfg.sliding_window == 4096
+    assert all(s.attn == "swa" for s in cfg.period)
+    # other shapes stay full attention
+    cfg2 = resolve_config("mistral-nemo-12b", SHAPES["train_4k"])
+    assert all(s.attn == "full" for s in cfg2.period)
+
+
+def test_shape_bytes_parser():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[4,4]{1,0}, bf16[2,2]{1,0})") == 64 + 8
+    assert _shape_bytes("pred[10]") == 10
+
+
+def test_parse_collectives_counts_and_bytes():
+    hlo = """
+HloModule test
+ENTRY %main (x: f32[64]) -> f32[64] {
+  %x = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={}
+  %ag = f32[128]{0} all-gather(%ar), dimensions={0}
+  %a2a = f32[64]{0} all-to-all(%ag), dimensions={0}
+  ROOT %out = f32[64]{0} add(%a2a, %ar)
+}
+"""
+    stats = parse_collectives(hlo)
+    assert stats.count_by_kind["all-reduce"] == 1
+    assert stats.bytes_by_kind["all-reduce"] == 64 * 4
+    assert stats.bytes_by_kind["all-gather"] == 128 * 4
+    assert stats.bytes_by_kind["all-to-all"] == 64 * 4
+    assert not stats.in_while_body
+
+
+def test_extrapolate_depth_linear():
+    # cost(P) = 10 + 5P measured at P=1, 2 → exact at any P
+    assert extrapolate_depth(15.0, 20.0, 9) == pytest.approx(10 + 5 * 9)
+    # non-increasing guard
+    assert extrapolate_depth(10.0, 10.0, 5) == pytest.approx(10.0)
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(
+        arch="x", shape="train_4k", mesh="m",
+        flops=197e12, hbm_bytes=819e9, collective_bytes=50e9,
+        collective_breakdown={}, model_flops=98.5e12,
+    )
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs import get_config
+
+    cfg = get_config("gemma-2b")
+    tr = model_flops_per_step(cfg, SHAPES["train_4k"], "train")
+    de = model_flops_per_step(cfg, SHAPES["decode_32k"], "decode")
+    # train: 6·N·(B·S) vs decode: 2·N·B → ratio 3·S·(256/128)
+    assert tr / de == pytest.approx(3 * 4096 * 256 / 128, rel=1e-6)
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_param_pspecs_cover_tree(arch):
+    """Every param leaf gets a PartitionSpec of matching rank on the
+    production mesh (constructed abstractly — no devices needed)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.input_specs import params_shape
+    from repro.models.init import param_pspecs
+
+    cfg = resolve_config(arch, SHAPES["train_4k"])
+    pshape = params_shape(cfg)
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    specs = param_pspecs(cfg, pshape, mesh)
+    flat_p = jax.tree.leaves(pshape)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert isinstance(spec, P)
+        assert len(spec) <= len(leaf.shape)
+        # divisibility honored
+        sizes = {"data": 16, "model": 16}
+        for dim, entry in zip(leaf.shape, spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            assert dim % total == 0, (arch, leaf.shape, spec)

@@ -1,0 +1,99 @@
+"""Partitioner invariants (paper §6.5, §7.3) — incl. hypothesis
+property tests on the two-objective formulation."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse.partition import (
+    PARTITIONERS,
+    partition_2d,
+    partition_columns,
+    partition_rows,
+    partition_stats,
+)
+from repro.sparse.synthetic import make_skewed_csr
+
+
+@pytest.mark.parametrize("kind", PARTITIONERS)
+def test_partition_is_permutation(skewed_csr, kind):
+    cp = partition_columns(skewed_csr, 8, kind)
+    assert np.array_equal(np.sort(cp.order), np.arange(skewed_csr.n))
+    assert cp.starts[0] == 0 and cp.starts[-1] == skewed_csr.n
+    assert (np.diff(cp.starts) > 0).all()
+
+
+def test_cyclic_nlocal_exact(skewed_csr):
+    """Paper: cyclic bounds n_local to exactly ⌈n/p⌉ (§6.5)."""
+    for p in (2, 4, 8, 16):
+        cp = partition_columns(skewed_csr, p, "cyclic")
+        assert cp.n_local.max() - cp.n_local.min() <= 1
+        assert cp.n_local.max() == -(-skewed_csr.n // p)
+
+
+def test_rows_nlocal_exact(skewed_csr):
+    cp = partition_columns(skewed_csr, 8, "rows")
+    assert cp.n_local.max() - cp.n_local.min() <= 1
+
+
+def test_nnz_partitioner_balances_nnz_on_skewed_data(skewed_csr):
+    """κ(nnz) ≤ κ(rows) on column-skewed data — the greedy partitioner's
+    one design goal (paper Table 9)."""
+    p = 8
+    st_rows = partition_stats(skewed_csr, partition_columns(skewed_csr, p, "rows"))
+    st_nnz = partition_stats(skewed_csr, partition_columns(skewed_csr, p, "nnz"))
+    assert st_nnz.kappa <= st_rows.kappa
+
+
+def test_cyclic_beats_rows_kappa_on_skew():
+    """On strongly column-skewed data cyclic's κ ≈ 1 while contiguous
+    rows-partitioning concentrates hot columns (paper Fig 3)."""
+    a = make_skewed_csr(2000, 4096, 30, 1.2, seed=11)
+    p = 16
+    st_rows = partition_stats(a, partition_columns(a, p, "rows"))
+    st_cyc = partition_stats(a, partition_columns(a, p, "cyclic"))
+    assert st_cyc.kappa < st_rows.kappa
+    # paper measures κ=1.9 for cyclic on url — near-optimal, not 1.0,
+    # because single hot columns cannot be split
+    assert st_cyc.kappa < 2.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.sampled_from([2, 4, 8]),
+    alpha=st.floats(0.0, 1.5),
+    seed=st.integers(0, 1000),
+)
+def test_partition_2d_preserves_nnz(p, alpha, seed):
+    a = make_skewed_csr(120, 160, 8, alpha, seed=seed)
+    for kind in PARTITIONERS:
+        blocks, cp, rb = partition_2d(a, 2, p, kind)
+        assert sum(blk.nnz for row in blocks for blk in row) == a.nnz
+        # reconstruct column content: every column appears exactly once
+        assert np.array_equal(np.sort(np.concatenate([cp.rank_cols(j) for j in range(p)])), np.arange(a.n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 500), p=st.integers(1, 17))
+def test_row_bounds(m, p):
+    rb = partition_rows(m, p)
+    assert rb[0] == 0 and rb[-1] == m and len(rb) == p + 1
+    assert (np.diff(rb) >= 0).all()
+    assert np.diff(rb).max() - np.diff(rb).min() <= 1
+
+
+def test_two_objective_tradeoff_exists_on_heavy_skew():
+    """The paper's central partitioning observation: nnz-greedy achieves
+    κ≈1 but can blow up max n_local (cache spill); cyclic achieves both
+    objectives in expectation (§6.5, url case)."""
+    a = make_skewed_csr(4000, 8192, 50, 1.3, seed=5)
+    p = 32
+    stats = {k: partition_stats(a, partition_columns(a, p, k)) for k in PARTITIONERS}
+    # nnz-greedy achieves its one goal (κ≈1) ...
+    assert stats["nnz"].kappa <= 1.5
+    assert stats["nnz"].kappa < stats["rows"].kappa
+    # greedy must over-allocate columns somewhere vs the uniform share
+    assert stats["nnz"].max_n_local > stats["cyclic"].max_n_local
+    # cyclic: both objectives
+    assert stats["cyclic"].max_n_local == -(-a.n // p)
+    assert stats["cyclic"].kappa < 2.0

@@ -1,0 +1,120 @@
+"""Solver-family identities — the paper's algebraic claims.
+
+V1  s-step SGD ≡ SGD (Algorithm 3 is a reformulation of Algorithm 1).
+V2  Corner recovery: hybrid(p_r=1) ≡ s-step, hybrid(p_r=p, s=1) ≡
+    FedAvg, s-step(s=1) ≡ SGD, fedavg(τ=1) ≡ synchronous MB-SGD.
+V3  All solvers descend the same convex objective.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    full_loss,
+    make_problem,
+    run_fedavg,
+    run_hybrid_sgd,
+    run_sgd,
+    run_sstep_sgd,
+    stack_row_teams,
+    global_problem,
+)
+
+B, ETA, K = 8, 0.05, 64
+
+
+@pytest.fixture(scope="module")
+def prob(small_problem):
+    a, y = small_problem
+    return make_problem(a, y, row_multiple=64)
+
+
+def test_sstep_s1_equals_sgd(prob):
+    x0 = jnp.zeros(prob.n)
+    x_sgd, _ = run_sgd(prob, x0, B, ETA, K)
+    x_ss, _ = run_sstep_sgd(prob, x0, 1, B, ETA, K)
+    np.testing.assert_allclose(np.asarray(x_sgd), np.asarray(x_ss), atol=1e-6)
+
+
+@pytest.mark.parametrize("s", [2, 4, 8])
+def test_sstep_equals_sgd(prob, s):
+    """The paper's central communication-avoiding identity (§2, [14])."""
+    x0 = jnp.zeros(prob.n)
+    x_sgd, _ = run_sgd(prob, x0, B, ETA, K)
+    x_ss, _ = run_sstep_sgd(prob, x0, s, B, ETA, K)
+    np.testing.assert_allclose(np.asarray(x_sgd), np.asarray(x_ss), atol=5e-4)
+
+
+def test_hybrid_pr1_equals_sstep(small_problem):
+    a, y = small_problem
+    prob = make_problem(a, y, row_multiple=64)
+    s, tau = 4, 16
+    tp = stack_row_teams(a, y, 1, row_multiple=s * B)
+    x0 = jnp.zeros(prob.n)
+    x_h, _ = run_hybrid_sgd(tp, x0, s, B, ETA, tau, rounds=K // tau)
+    x_ss, _ = run_sstep_sgd(prob, x0, s, B, ETA, K)
+    np.testing.assert_allclose(np.asarray(x_h), np.asarray(x_ss), atol=1e-6)
+
+
+def test_hybrid_prp_s1_equals_fedavg(small_problem):
+    a, y = small_problem
+    tau, p = 16, 4
+    tp = stack_row_teams(a, y, p, row_multiple=B)
+    x0 = jnp.zeros(a.n)
+    x_h, _ = run_hybrid_sgd(tp, x0, 1, B, ETA, tau, rounds=4)
+    x_f, _ = run_fedavg(tp, x0, B, ETA, tau, rounds=4)
+    np.testing.assert_allclose(np.asarray(x_h), np.asarray(x_f), atol=1e-6)
+
+
+def test_fedavg_tau1_is_synchronous_minibatch(small_problem):
+    """τ=1 ⇒ every step averages p local gradients computed at the same
+    x: equivalent to one step on the averaged gradient (effective batch
+    p·b). Verify against the explicit computation."""
+    a, y = small_problem
+    p = 4
+    tp = stack_row_teams(a, y, p, row_multiple=B)
+    x0 = jnp.zeros(a.n)
+    x_f, _ = run_fedavg(tp, x0, B, ETA, tau=1, rounds=1)
+    # manual: mean over teams of one local SGD step from x0
+    from repro.core.fedavg import _local_sgd
+
+    xs = [
+        np.asarray(_local_sgd(tp.indices[i], tp.values[i], tp.n, x0, 0, 1, B, ETA))
+        for i in range(p)
+    ]
+    np.testing.assert_allclose(np.asarray(x_f), np.mean(xs, axis=0), atol=1e-6)
+
+
+def test_all_solvers_descend(small_problem):
+    a, y = small_problem
+    prob = make_problem(a, y, row_multiple=64)
+    x0 = jnp.zeros(prob.n)
+    f0 = float(full_loss(prob, x0))
+    for name, run in {
+        "sgd": lambda: run_sgd(prob, x0, B, ETA, 128)[0],
+        "sstep": lambda: run_sstep_sgd(prob, x0, 4, B, ETA, 128)[0],
+    }.items():
+        f1 = float(full_loss(prob, run()))
+        assert f1 < f0, f"{name} did not descend: {f1} >= {f0}"
+    tp = stack_row_teams(a, y, 4, row_multiple=32)
+    x_f, _ = run_fedavg(tp, x0, B, ETA, 8, rounds=4)
+    assert float(full_loss(global_problem(tp), x_f)) < f0
+    x_h, _ = run_hybrid_sgd(tp, x0, 4, B, ETA, 8, rounds=4)
+    assert float(full_loss(global_problem(tp), x_h)) < f0
+
+
+def test_hybrid_convergence_beats_fedavg_at_large_p(small_problem):
+    """Table 1: HybridSGD converges at 1/(K̂·b·p_r) vs FedAvg's drift at
+    large p — with equal data passes, hybrid at p_r<p should reach a loss
+    ≤ FedAvg at p (each hybrid row team takes exact s-step updates)."""
+    a, y = small_problem
+    x0 = jnp.zeros(a.n)
+    tau = 16
+    tp_full = stack_row_teams(a, y, 8, row_multiple=16)
+    x_f, _ = run_fedavg(tp_full, x0, 4, ETA, tau, rounds=8)
+    tp_h = stack_row_teams(a, y, 2, row_multiple=16)
+    x_h, _ = run_hybrid_sgd(tp_h, x0, 4, 4, ETA, tau, rounds=8)
+    lf = float(full_loss(global_problem(tp_full), x_f))
+    lh = float(full_loss(global_problem(tp_h), x_h))
+    assert lh <= lf * 1.02, (lh, lf)

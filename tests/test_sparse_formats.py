@@ -1,0 +1,79 @@
+"""CSR / ELL / BSR format correctness, incl. hypothesis sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.sparse.csr import CSRMatrix, csr_from_dense, csr_matvec, csr_rmatvec
+from repro.sparse.ell import ell_from_csr, ell_matvec, ell_matmat, ell_rmatvec, ell_rmatmat
+from repro.sparse.bsr import bsr_from_csr, bsr_matvec_ref, bsr_to_dense
+
+
+def random_dense(rng, m, n, density):
+    return (rng.random((m, n)) < density) * rng.standard_normal((m, n))
+
+
+@pytest.mark.parametrize("m,n,density", [(17, 23, 0.1), (64, 32, 0.3), (5, 200, 0.02)])
+def test_csr_roundtrip_and_matvec(m, n, density):
+    rng = np.random.default_rng(m * n)
+    a = random_dense(rng, m, n, density)
+    csr = csr_from_dense(a)
+    np.testing.assert_allclose(csr.to_dense(), a)
+    x, u = rng.standard_normal(n), rng.standard_normal(m)
+    np.testing.assert_allclose(csr_matvec(csr, x), a @ x, atol=1e-10)
+    np.testing.assert_allclose(csr_rmatvec(csr, u), a.T @ u, atol=1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 40),
+    n=st.integers(2, 60),
+    density=st.floats(0.01, 0.5),
+    seed=st.integers(0, 2**16),
+)
+def test_ell_matches_dense(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_dense(rng, m, n, density)
+    ell = ell_from_csr(csr_from_dense(a))
+    x = rng.standard_normal(n).astype(np.float32)
+    u = rng.standard_normal(m).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ell_matvec(ell, jnp.asarray(x))), a @ x, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ell_rmatvec(ell, jnp.asarray(u))), a.T @ u, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 50),
+    n=st.integers(2, 300),
+    density=st.floats(0.01, 0.4),
+    bm=st.sampled_from([4, 8]),
+    bn=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_bsr_roundtrip_and_matvec(m, n, density, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    a = random_dense(rng, m, n, density)
+    bsr = bsr_from_csr(csr_from_dense(a), bm=bm, bn=bn)
+    np.testing.assert_allclose(bsr_to_dense(bsr), a, atol=1e-6)
+    x = rng.standard_normal(n).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(bsr_matvec_ref(bsr, jnp.asarray(x))), a @ x, atol=2e-3
+    )
+
+
+def test_ell_matmat(skewed_csr):
+    rng = np.random.default_rng(0)
+    a = skewed_csr.to_dense()
+    ell = ell_from_csr(skewed_csr)
+    X = rng.standard_normal((skewed_csr.n, 5)).astype(np.float32)
+    U = rng.standard_normal((skewed_csr.m, 5)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ell_matmat(ell, jnp.asarray(X))), a @ X, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ell_rmatmat(ell, jnp.asarray(U))), a.T @ U, rtol=1e-3, atol=1e-3)
+
+
+def test_scale_rows(skewed_csr):
+    y = np.where(np.random.default_rng(1).random(skewed_csr.m) < 0.5, 1.0, -1.0)
+    scaled = skewed_csr.scale_rows(y)
+    np.testing.assert_allclose(scaled.to_dense(), skewed_csr.to_dense() * y[:, None])
