@@ -4,11 +4,14 @@ numbers only; the BlockSpec VMEM analysis is the TPU-relevant output).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.kernels.ell_gram import ell_gram_and_v
 from repro.kernels.ops import sparse_linear_op, sstep_gram_and_v
+from repro.kernels.ref import ell_gram_and_v_ref
 from repro.sparse.bsr import bsr_from_csr
 from repro.sparse.synthetic import make_skewed_csr
 
@@ -35,3 +38,28 @@ def run() -> None:
     t = time_fn(lambda: sstep_gram_and_v(y, xx, bk=512), repeats=3, warmup=1)
     vmem = 128 * 512 * 4 + 128 * 128 * 4 + 512 * 4
     emit("kernels/gram/fused-interp", t * 1e6, f"sb=128 n=4096 bk=512;vmem_bytes={vmem}")
+
+    # ---- engine bundle primitive: Pallas ELL-Gram vs dense-reference ----
+    # The engine's inner loop runs the scatter-free ELL path; the dense
+    # scatter (the retired pre-engine path, kernels/ref.py) is the
+    # baseline. README "Benchmarks" documents how to run this.
+    for s, b, width, n in [(4, 16, 24, 4096), (8, 16, 24, 16384), (4, 32, 48, 65536)]:
+        sb = s * b
+        rng = np.random.default_rng(7)
+        idx = jnp.asarray(rng.integers(0, n, size=(sb, width)).astype(np.int32))
+        val = jnp.asarray(rng.standard_normal((sb, width)).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+
+        pallas_fn = jax.jit(lambda i, v, z: ell_gram_and_v(i, v, z, n=n, bk=512))
+        dense_fn = jax.jit(lambda i, v, z: ell_gram_and_v_ref(i, v, z, n))
+        t_pallas = time_fn(lambda: pallas_fn(idx, val, x), repeats=3, warmup=1)
+        t_dense = time_fn(lambda: dense_fn(idx, val, x), repeats=3, warmup=1)
+        tag = f"s={s};b={b};w={width};n={n}"
+        emit(f"kernels/bundle/pallas-ell-gram/{sb}x{n}", t_pallas * 1e6, tag)
+        emit(f"kernels/bundle/dense-ref/{sb}x{n}", t_dense * 1e6, tag)
+        emit(
+            f"kernels/bundle/speedup/{sb}x{n}",
+            0.0,
+            f"{tag};dense_over_pallas={t_dense / max(t_pallas, 1e-12):.2f}x;"
+            f"hbm_bytes_dense={sb * n * 4};vmem_bytes_pallas={sb * 512 * 4 + sb * sb * 4}",
+        )

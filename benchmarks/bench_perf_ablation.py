@@ -22,6 +22,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import dataclasses, json, jax
 import repro.configs as C
+from repro import compat
 from repro.launch.dryrun import lower_step, _cost_and_collectives
 from repro.launch.input_specs import SHAPES, resolve_config
 from repro.launch.mesh import make_production_mesh
@@ -32,7 +33,7 @@ out = {}
 for prof in ("tp", "dp"):
     cfg = dataclasses.replace(resolve_config("gemma-2b", shape),
                               sharding_profile=prof, n_layers=2)
-    with jax.sharding.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         f, b, coll = _cost_and_collectives(cfg, shape, mesh, 2)
     out[prof] = {"flops": f, "bytes": b, "coll": coll.total_bytes}
 print("RESULT " + json.dumps(out))

@@ -1,8 +1,9 @@
-"""Quickstart: HybridSGD on a synthetic column-skewed dataset.
+"""Quickstart: the unified (p_r, p_c, s, τ) engine on a synthetic
+column-skewed dataset.
 
-Runs the four solvers of the paper on the same convex logistic-
-regression objective, shows the corner identities, and uses the cost
-model + topology rule to pick a mesh for a production machine.
+Runs the paper's four algorithms as corners of one schedule family,
+shows the corner identities, and uses the cost model + topology rule
+to pick a mesh for a production machine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,13 +12,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (
+    ParallelSGDSchedule,
     full_loss,
     global_problem,
     make_problem,
-    run_fedavg,
-    run_hybrid_sgd,
-    run_sgd,
-    run_sstep_sgd,
+    run_parallel_sgd,
+    single_team,
     stack_row_teams,
 )
 from repro.costmodel import PERLMUTTER, TPU_V5E, grid_search_config, topology_rule
@@ -37,22 +37,25 @@ def main() -> None:
         st = partition_stats(a, partition_columns(a, 8, kind))
         print(f"  partitioner {kind:7s}: κ={st.kappa:5.2f}  max n_local={st.max_n_local}")
 
-    # --- solvers ---
+    # --- one engine, four corners of the (p_r, s, τ) family ---
     prob = make_problem(a, y, row_multiple=S * B * 4)
+    one = single_team(prob)
     x0 = jnp.zeros(a.n)
     f0 = float(full_loss(prob, x0))
-    x_sgd, _ = run_sgd(prob, x0, B, ETA, 256)
-    x_ss, _ = run_sstep_sgd(prob, x0, S, B, ETA, 256)
+
+    x_sgd, _ = run_parallel_sgd(one, x0, ParallelSGDSchedule.mb_sgd(B, ETA, 256))
+    x_ss, _ = run_parallel_sgd(one, x0, ParallelSGDSchedule.sstep(S, B, ETA, 256))
     tp = stack_row_teams(a, y, 4, row_multiple=S * B)
-    x_fa, _ = run_fedavg(tp, x0, B, ETA, TAU, rounds=4)
-    x_hy, _ = run_hybrid_sgd(tp, x0, S, B, ETA, TAU, rounds=4)
+    x_fa, _ = run_parallel_sgd(tp, x0, ParallelSGDSchedule.fedavg(4, B, ETA, TAU, rounds=4))
+    x_hy, _ = run_parallel_sgd(tp, x0, ParallelSGDSchedule.hybrid(4, S, B, ETA, TAU, rounds=4))
     gp = global_problem(tp)
     print(f"\n  loss(x0)        = {f0:.4f}")
-    print(f"  SGD             → {float(full_loss(prob, x_sgd)):.4f}")
+    print(f"  MB-SGD          → {float(full_loss(prob, x_sgd)):.4f}   (p_r=1, s=1, τ=1)")
     print(f"  s-step SGD      → {float(full_loss(prob, x_ss)):.4f}   "
-          f"(‖x_sgd−x_ss‖∞ = {float(jnp.abs(x_sgd - x_ss).max()):.2e} — same algorithm!)")
-    print(f"  FedAvg (p=4)    → {float(full_loss(gp, x_fa)):.4f}")
-    print(f"  HybridSGD (4×·) → {float(full_loss(gp, x_hy)):.4f}")
+          f"(p_r=1, τ=s; ‖x_sgd−x_ss‖∞ = {float(jnp.abs(x_sgd - x_ss).max()):.2e} "
+          f"— same algorithm!)")
+    print(f"  FedAvg (p=4)    → {float(full_loss(gp, x_fa)):.4f}   (s=1 — no Gram work)")
+    print(f"  HybridSGD (4×·) → {float(full_loss(gp, x_hy)):.4f}   (general 2D point)")
 
     # --- mesh + config selection (paper Eq. 7 + Eq. 4) ---
     for machine in (PERLMUTTER, TPU_V5E):

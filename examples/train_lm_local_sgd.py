@@ -16,6 +16,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import get_config, reduced
 from repro.models.init import init_params
 from repro.models.transformer import lm_loss
@@ -60,14 +61,12 @@ def run(mesh, tau: int, label: str) -> list[float]:
 
 def main() -> None:
     print(f"devices: {len(jax.devices())}")
-    mesh_hybrid = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                                axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    mesh_sync = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_hybrid = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    mesh_sync = compat.make_mesh((4, 2), ("data", "model"))
     print(f"hybrid-2D (2 pods, τ={TAU}) vs fully-synchronous, same data:")
-    with jax.sharding.set_mesh(mesh_hybrid):
+    with compat.use_mesh(mesh_hybrid):
         l_h = run(mesh_hybrid, TAU, f"hybrid 2x2x2 tau={TAU}")
-    with jax.sharding.set_mesh(mesh_sync):
+    with compat.use_mesh(mesh_sync):
         l_s = run(mesh_sync, 1, "synchronous 4x2")
     gap = l_h[-1] - l_s[-1]
     print(f"final-loss gap (hybrid − sync) = {gap:+.4f} — the τ-drift cost the "

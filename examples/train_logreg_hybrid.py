@@ -70,15 +70,20 @@ def main() -> None:
         t, r, l = results[name]
         print(f"  {name:12s}: {ok} target in {t:6.2f}s ({r} rounds, loss {l:.4f})")
 
+    # CPU wall-clock comparison → dense-oracle bundle backend: url's ELL
+    # width ≫ s·b, so the scatter-free expansion is MXU work that
+    # interpret mode serializes off-TPU (kernel timings: bench_kernels).
     prob = make_problem(a, y, row_multiple=s * b)
     to_target("sgd", lambda r: run_sgd(prob, x0, b, ETA, r * tau, loss_every=tau)[1])
-    to_target("sstep-1d", lambda r: run_sstep_sgd(prob, x0, s, b, ETA, r * tau, loss_every=tau)[1])
+    to_target("sstep-1d", lambda r: run_sstep_sgd(prob, x0, s, b, ETA, r * tau,
+                                                  loss_every=tau, gram="dense")[1])
 
     tp_f = stack_row_teams(a, y, 8, row_multiple=b)
     to_target("fedavg(p=8)", lambda r: run_fedavg(tp_f, x0, b, ETA, tau, rounds=r, loss_every=1)[1])
 
     tp_h = stack_row_teams(a, y, p_r_run, row_multiple=s * b)
-    to_target(f"hybrid({p_r_run}x.)", lambda r: run_hybrid_sgd(tp_h, x0, s, b, ETA, tau, rounds=r, loss_every=1)[1])
+    to_target(f"hybrid({p_r_run}x.)", lambda r: run_hybrid_sgd(tp_h, x0, s, b, ETA, tau, rounds=r,
+                                                               loss_every=1, gram="dense")[1])
 
     t_fed = results["fedavg(p=8)"][0]
     t_hyb = results[f"hybrid({p_r_run}x.)"][0]

@@ -1,18 +1,35 @@
-"""The paper's contribution: HybridSGD and its 1D baselines, in JAX.
+"""The paper's contribution: one 2D-parallel SGD family, in JAX.
 
-Solver family (all solve the same convex logistic-regression objective):
+The unified engine (repro.core.engine) implements the whole
+(p_r, p_c, s, τ) family with one inner loop on the scatter-free Pallas
+Gram path:
+
+  run_parallel_sgd     the engine — any point of the family
+  ParallelSGDSchedule  the knob object (corners by name: mb_sgd,
+                       sstep, fedavg, hybrid)
+  bundle_gram_v        the shared s-bundle primitive (G, v)
+
+Configured corners, kept as thin wrappers for compatibility:
 
   run_sgd              Algorithm 1 — sequential mini-batch SGD
   run_sstep_sgd        Algorithm 3 — s-step (communication-avoiding) SGD
   run_fedavg           Algorithm 2 — FedAvg / local SGD
   run_hybrid_sgd       HybridSGD, exact simulated-rank semantics
   run_hybrid_distributed  HybridSGD under shard_map on a 2D device mesh
+                          (shares the engine's bundle primitive)
 
 Corner identities (tested): hybrid(p_r=1) ≡ s-step; hybrid(p_r=p, s=1)
 ≡ FedAvg; s-step(s=1) ≡ SGD; fedavg(τ=1) ≡ synchronous MB-SGD.
 """
 
 from repro.core.problem import LogisticProblem, full_loss, make_problem, sigmoid_residual
+from repro.core.engine import (
+    ParallelSGDSchedule,
+    bundle_gram_v,
+    inner_corrections,
+    run_parallel_sgd,
+    single_team,
+)
 from repro.core.sgd import run_sgd, sgd_step
 from repro.core.sstep import run_sstep_sgd
 from repro.core.teams import TeamProblem, global_problem, stack_row_teams
@@ -32,6 +49,11 @@ __all__ = [
     "full_loss",
     "make_problem",
     "sigmoid_residual",
+    "ParallelSGDSchedule",
+    "bundle_gram_v",
+    "inner_corrections",
+    "run_parallel_sgd",
+    "single_team",
     "run_sgd",
     "sgd_step",
     "run_sstep_sgd",

@@ -8,29 +8,30 @@ axes are ("rows", "cols") = (p_r, p_c):
   plus its n_loc-word shard of the weight vector.
 
 Per s-bundle (the paper's row-team Allreduce):
-  G_partial, v_partial computed locally → psum over "cols"
-  (exactly the (s²b² + sb)-word payload of Table 3); the weight update
-  Yᵀu is fully local under column partitioning.
+  G_partial, v_partial computed locally via the engine's shared bundle
+  primitive (repro.core.engine.bundle_gram_v — scatter-free) → psum
+  over "cols" (exactly the (s²b² + sb)-word payload of Table 3); the
+  weight update Yᵀu is fully local under column partitioning.
 Per τ inner iterations (the paper's column Allreduce):
   x_local ← pmean over "rows" (n/p_c words per rank).
 
-Numerics match repro.core.hybrid.run_hybrid_sgd exactly (tested in a
+Numerics match repro.core.engine.run_parallel_sgd exactly (tested in a
 multi-device subprocess); the simulated version is the oracle.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
-from repro.core.problem import sigmoid_residual
+from repro.compat import shard_map
+from repro.core.engine import bundle_gram_v, inner_corrections
 from repro.sparse.csr import CSRMatrix
+from repro.sparse.ell import EllBlock, ell_rmatvec
 from repro.sparse.partition import ColumnPartition, partition_columns, partition_rows
 
 
@@ -140,10 +141,16 @@ def make_hybrid_step(
     b: int,
     tau: int,
     eta: float,
+    gram: str = "blocked",
+    bk: int = 512,
 ):
     """Return a jitted fn (indices, values, x_pad, round_idx) → x_pad
     executing one HybridSGD round (τ inner s-step iterations + column
-    average) under shard_map on ``mesh`` (axes "rows", "cols")."""
+    average) under shard_map on ``mesh`` (axes "rows", "cols").
+
+    ``gram`` selects the bundle backend (see engine.GRAM_METHODS);
+    "blocked" is the scatter-free panel-streaming path, safe inside
+    shard_map on every backend."""
     if tau % s:
         raise ValueError("tau must be divisible by s")
     sb = s * b
@@ -162,21 +169,15 @@ def make_hybrid_step(
             start = (k0 * sb) % m_local
             bi = jax.lax.dynamic_slice_in_dim(idx_blk, start, sb, axis=0)
             bv = jax.lax.dynamic_slice_in_dim(val_blk, start, sb, axis=0)
-            dense = jnp.zeros((sb, n_loc), bv.dtype).at[jnp.arange(sb)[:, None], bi].add(bv)
-            # row-team Allreduce: Gram + partial products (paper Table 3)
-            g = jax.lax.psum(dense @ dense.T, "cols")
-            g = jnp.tril(g, k=-1)
-            v = jax.lax.psum(dense @ x_loc, "cols")
-
-            def inner(u_acc, j):
-                zj = jax.lax.dynamic_slice_in_dim(v, j * b, b) + (eta / b) * (
-                    jax.lax.dynamic_slice_in_dim(g, j * b, b, axis=0) @ u_acc
-                )
-                uj = sigmoid_residual(zj)
-                return jax.lax.dynamic_update_slice_in_dim(u_acc, uj, j * b, axis=0), None
-
-            u, _ = jax.lax.scan(inner, jnp.zeros(sb, v.dtype), jnp.arange(s))
-            return x_loc + (eta / b) * (dense.T @ u), None
+            # local partial (G, v) via the engine's shared primitive —
+            # then the row-team Allreduce (paper Table 3 payload)
+            g_part, v_part = bundle_gram_v(bi, bv, x_loc, n_loc, gram=gram, bk=bk)
+            g = jax.lax.psum(g_part, "cols")
+            v = jax.lax.psum(v_part, "cols")
+            u = inner_corrections(g, v, s, b, eta)
+            # Yᵀu stays local under column partitioning
+            blk = EllBlock(indices=bi, values=bv, n=n_loc)
+            return x_loc + (eta / b) * ell_rmatvec(blk, u).astype(x_loc.dtype), None
 
         x_loc, _ = jax.lax.scan(bundle, x_loc, jnp.arange(bundles))
         # column Allreduce: FedAvg averaging across row teams (n/p_c words)
@@ -188,7 +189,6 @@ def make_hybrid_step(
         mesh=mesh,
         in_specs=(P("rows", "cols"), P("rows", "cols"), P("cols"), P()),
         out_specs=P("rows", "cols"),
-        check_vma=False,
     )
 
     @jax.jit
@@ -210,9 +210,10 @@ def run_hybrid_distributed(
     eta: float,
     tau: int,
     rounds: int,
+    gram: str = "blocked",
 ):
     """Convenience driver: place data, run ``rounds`` rounds, gather x."""
-    step = make_hybrid_step(mesh, prob, s, b, tau, eta)
+    step = make_hybrid_step(mesh, prob, s, b, tau, eta, gram=gram)
     data_sh = NamedSharding(mesh, P("rows", "cols"))
     x_sh = NamedSharding(mesh, P("cols"))
     idx = jax.device_put(prob.indices, data_sh)

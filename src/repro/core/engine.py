@@ -1,0 +1,270 @@
+"""The unified parallel-SGD engine — one inner loop for the whole
+(p_r, p_c, s, τ) family.
+
+The paper's four algorithms are corners of a single 2D-parallel method:
+p_r row teams each run τ inner iterations of s-step SGD (τ/s s-bundles)
+between parameter averagings. One engine therefore subsumes them all:
+
+  corner                      schedule
+  ------------------------    ------------------------------------
+  mini-batch SGD (Alg. 1)     p_r = 1, s = 1, τ = 1
+  s-step SGD     (Alg. 3)     p_r = 1, τ = s         (no averaging)
+  FedAvg         (Alg. 2)     s = 1                  (no Gram work)
+  HybridSGD      (§4.1)       general (p_r, s, τ)
+
+p_c is a *communication* knob, not a numerical one: it decides where
+columns live (and hence what is Allreduced — see
+repro.core.distributed), never what is computed. The engine here
+implements the exact simulated-rank semantics on one device; the
+shard_map execution in repro.core.distributed shares this module's
+bundle primitive and inner-correction loop, so the two paths cannot
+drift.
+
+The s-bundle computation G = tril(Y Yᵀ, -1), v = Y x routes through the
+scatter-free Pallas ELL-Gram kernel (repro.kernels.ell_gram) — the old
+per-bundle densify into a (sb × n) scratch matrix survives only as the
+parity oracle in repro.kernels.ref.
+
+repro.core.{sgd,sstep,fedavg,hybrid} re-export configured engine calls
+for backwards compatibility.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import LogisticProblem, full_loss, sigmoid_residual
+from repro.core.teams import TeamProblem, global_problem
+from repro.kernels.ell_gram import ell_gram_and_v, ell_gram_and_v_blocked
+from repro.kernels.ref import ell_gram_and_v_ref
+from repro.sparse.ell import EllBlock, ell_matvec, ell_rmatvec
+
+GRAM_METHODS = ("pallas", "blocked", "dense")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelSGDSchedule:
+    """The knobs of the 2D-parallel SGD family (paper Table 3 row
+    "HybridSGD"; see docs/paper_map.md for the paper→code map).
+
+    p_r     row teams (FedAvg axis); must equal the TeamProblem's p.
+    s       bundle depth — SGD steps fused per Gram round-trip.
+    b       mini-batch rows per SGD step (bundle = s·b rows).
+    tau     inner iterations between row-team averagings; s | τ.
+    eta     step size.
+    rounds  outer rounds (total SGD-equivalent iterations = rounds·τ).
+    loss_every   sample the full objective every this many rounds
+                 (0 = never; the returned loss trace is then empty).
+    gram    bundle (G, v) backend: "pallas" (scatter-free ELL kernel,
+            the production path), "blocked" (same math as pure jnp —
+            what shard_map uses), "dense" (the retired densify oracle,
+            kernels/ref.py — tests only).
+    bk      column-panel width for the Gram kernels.
+    interpret   Pallas interpret mode — True off-TPU (this container),
+            False for the compiled Mosaic kernel on real hardware.
+    p_c     column shards. Communication-only: it never changes the
+            numerics (kept here so one object describes the full mesh;
+            repro.core.distributed consumes it).
+    """
+
+    p_r: int = 1
+    s: int = 1
+    b: int = 8
+    tau: int = 1
+    eta: float = 0.05
+    rounds: int = 1
+    loss_every: int = 0
+    gram: str = "pallas"
+    bk: int = 512
+    interpret: bool = True
+    p_c: int = 1
+
+    def __post_init__(self):
+        # NOTE: s | τ is required by the *solver* (checked in
+        # run_parallel_sgd), not here: the NN trainer reuses this object
+        # with s = grad-accum microsteps, where the coupling is absent.
+        if self.loss_every and self.rounds % self.loss_every:
+            raise ValueError(
+                f"rounds={self.rounds} must be divisible by loss_every={self.loss_every}"
+            )
+        if self.gram not in GRAM_METHODS:
+            raise ValueError(f"gram={self.gram!r} not in {GRAM_METHODS}")
+
+    # ---- the paper's corners, by name ----
+
+    @classmethod
+    def mb_sgd(cls, b: int, eta: float, iters: int, loss_every: int = 0, **kw):
+        """Algorithm 1: synchronous mini-batch SGD."""
+        return cls(p_r=1, s=1, b=b, tau=1, eta=eta, rounds=iters, loss_every=loss_every, **kw)
+
+    @classmethod
+    def sstep(cls, s: int, b: int, eta: float, iters: int, loss_every: int = 0, **kw):
+        """Algorithm 3: 1D s-step SGD — iters/s bundles, one bundle per
+        round, no averaging (p_r = 1)."""
+        if iters % s:
+            raise ValueError(f"iters={iters} must be divisible by s={s}")
+        return cls(
+            p_r=1, s=s, b=b, tau=s, eta=eta, rounds=iters // s,
+            loss_every=max(loss_every // s, 1) if loss_every else 0, **kw,
+        )
+
+    @classmethod
+    def fedavg(cls, p: int, b: int, eta: float, tau: int, rounds: int,
+               loss_every: int = 0, **kw):
+        """Algorithm 2: FedAvg / local SGD — s = 1, so no Gram work."""
+        return cls(p_r=p, s=1, b=b, tau=tau, eta=eta, rounds=rounds,
+                   loss_every=loss_every, **kw)
+
+    @classmethod
+    def hybrid(cls, p_r: int, s: int, b: int, eta: float, tau: int, rounds: int,
+               loss_every: int = 0, **kw):
+        """HybridSGD (§4.1): the general 2D point."""
+        return cls(p_r=p_r, s=s, b=b, tau=tau, eta=eta, rounds=rounds,
+                   loss_every=loss_every, **kw)
+
+
+def bundle_gram_v(
+    indices, values, x, n: int, *, gram: str = "pallas", bk: int = 512,
+    interpret: bool = True,
+):
+    """The shared s-bundle primitive: local (G, v) = (tril(YYᵀ,-1), Yx)
+    for the ELL bundle Y, without densifying Y to (sb, n) in HBM.
+
+    Under column partitioning each shard computes its partial (G, v)
+    with this same function and the row-team Allreduce (psum over
+    "cols") sums them — tril commutes with the sum, so the simulated
+    and distributed paths share one primitive."""
+    if gram == "pallas":
+        return ell_gram_and_v(indices, values, x, n=n, bk=bk, interpret=interpret)
+    if gram == "blocked":
+        return ell_gram_and_v_blocked(indices, values, x, n=n, bk=bk)
+    if gram == "dense":
+        return ell_gram_and_v_ref(indices, values, x, n)
+    raise ValueError(f"gram={gram!r} not in {GRAM_METHODS}")
+
+
+def inner_corrections(g, v, s: int, b: int, eta: float) -> jnp.ndarray:
+    """Algorithm 3 lines 9-14: the s deferred-update corrections.
+
+    u_j = sigmoid_residual(v_j + (η/b) Σ_{l<j} G_{jl} u_l); G is
+    strictly lower so in-block terms multiply zeros. Shared by the
+    engine and the shard_map path (and mirrored VMEM-resident by
+    repro.kernels.sstep_inner)."""
+
+    def inner(u_acc, j):
+        zj = jax.lax.dynamic_slice_in_dim(v, j * b, b) + (eta / b) * (
+            jax.lax.dynamic_slice_in_dim(g, j * b, b, axis=0) @ u_acc
+        )
+        uj = sigmoid_residual(zj)
+        return jax.lax.dynamic_update_slice_in_dim(u_acc, uj, j * b, axis=0), None
+
+    u, _ = jax.lax.scan(inner, jnp.zeros(s * b, v.dtype), jnp.arange(s))
+    return u
+
+
+def _team_inner_iterations(indices, values, n: int, x, round_idx, eta,
+                           sched: ParallelSGDSchedule):
+    """τ inner iterations (= τ/s s-bundles) on one row team's ELL rows.
+    ``eta`` is a traced scalar (sweep-friendly: no recompile per value)."""
+    m_local = indices.shape[0]
+    bundles = sched.tau // sched.s
+    s, b = sched.s, sched.b
+    sb = s * b
+
+    def bundle_step(x, t):
+        k0 = round_idx * bundles + t
+        start = (k0 * sb) % m_local
+        idx = jax.lax.dynamic_slice_in_dim(indices, start, sb, axis=0)
+        val = jax.lax.dynamic_slice_in_dim(values, start, sb, axis=0)
+        bundle = EllBlock(indices=idx, values=val, n=n)
+        if s == 1:
+            # FedAvg/MB-SGD corner: the Gram is empty (no deferred
+            # updates to correct) — one SpMV + one SpMVᵀ, exactly
+            # Algorithm 2's local step.
+            u = sigmoid_residual(ell_matvec(bundle, x))
+        else:
+            g, v = bundle_gram_v(idx, val, x, n, gram=sched.gram, bk=sched.bk,
+                                 interpret=sched.interpret)
+            u = inner_corrections(g, v, s, b, eta)
+        return x + (eta / b) * ell_rmatvec(bundle, u).astype(x.dtype), None
+
+    x, _ = jax.lax.scan(bundle_step, x, jnp.arange(bundles))
+    return x
+
+
+@partial(jax.jit, static_argnames=("sched",))
+def _run_engine(tp, x0, eta, sched):
+    gp = global_problem(tp)
+
+    chunk = sched.loss_every if sched.loss_every else sched.rounds
+    n_chunks = max(sched.rounds // chunk, 1)
+
+    def one_round(x, r):
+        def team(args):
+            idx, val = args
+            return _team_inner_iterations(idx, val, tp.n, x, r, eta, sched)
+
+        if sched.s == 1:
+            # FedAvg/MB-SGD corner: per-team working set is one (b, w)
+            # batch — run all teams batched (the old run_fedavg vmap).
+            xs = jax.vmap(team)((tp.indices, tp.values))
+        else:
+            # lax.map (not vmap): teams run sequentially on one device,
+            # bounding peak memory at one team's bundle working set.
+            xs = jax.lax.map(team, (tp.indices, tp.values))
+        return jnp.mean(xs, axis=0), None
+
+    def outer(x, c):
+        x, _ = jax.lax.scan(one_round, x, c * chunk + jnp.arange(chunk))
+        return x, full_loss(gp, x)
+
+    x, losses = jax.lax.scan(outer, x0, jnp.arange(n_chunks))
+    if not sched.loss_every:
+        losses = jnp.zeros((0,), losses.dtype)
+    return x, losses
+
+
+def run_parallel_sgd(
+    tp: TeamProblem,
+    x0: jnp.ndarray,
+    sched: ParallelSGDSchedule,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the full 2D family point described by ``sched`` on the
+    stacked row teams ``tp`` (exact simulated-rank semantics).
+
+    Each of ``sched.rounds`` outer rounds = τ inner s-step iterations
+    per row team + one averaging across the p_r teams (identity when
+    p_r = 1). Returns (x, losses) with the full global objective
+    sampled every ``loss_every`` rounds.
+
+    η enters the compiled computation as a traced operand, so an
+    η-sweep over otherwise-identical schedules reuses one executable.
+    """
+    if sched.tau % sched.s:
+        raise ValueError(
+            f"tau={sched.tau} must be divisible by s={sched.s} (paper requires s ≤ τ)"
+        )
+    if tp.p != sched.p_r:
+        raise ValueError(f"TeamProblem has p={tp.p} teams but schedule p_r={sched.p_r}")
+    if tp.rows_local % (sched.s * sched.b):
+        raise ValueError(
+            f"local rows {tp.rows_local} must be divisible by s·b={sched.s * sched.b}"
+        )
+    eta = jnp.asarray(sched.eta, x0.dtype)
+    return _run_engine(tp, x0, eta, dataclasses.replace(sched, eta=0.0))
+
+
+def single_team(problem: LogisticProblem) -> TeamProblem:
+    """View a LogisticProblem as a 1-team TeamProblem (p_r = 1 corners)."""
+    return TeamProblem(
+        indices=problem.ya.indices[None],
+        values=problem.ya.values[None],
+        rows_valid=problem.rows_valid[None],
+        p=1,
+        m=problem.m,
+        n=problem.n,
+    )

@@ -1,29 +1,31 @@
 """Algorithm 2 — Federated SGD with Averaging (FedAvg / local SGD).
 
+DEPRECATED module layout: ``run_fedavg`` is now a thin wrapper over the
+unified engine (repro.core.engine) at the corner s = 1 (the bundle
+degenerates to one mini-batch step, so no Gram work is done).
+
 Row-partition (A, y) across p ranks; each rank runs τ sequential local
 SGD iterations from the shared iterate; the local solutions are averaged
 (one length-n Allreduce) every round. τ=1 degenerates to synchronous
 mini-batch SGD on an effective batch of p·b; p=1 is sequential SGD.
-
-Simulated-rank implementation: vmap the local solver over the stacked
-team axis, then mean — *numerically identical* to the p-rank MPI/SPMD
-execution (same per-rank sample sequences).
 """
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import full_loss, sigmoid_residual
-from repro.core.teams import TeamProblem, global_problem
+from repro.core.engine import ParallelSGDSchedule, run_parallel_sgd
+from repro.core.problem import sigmoid_residual
+from repro.core.teams import TeamProblem
 from repro.sparse.ell import EllBlock, ell_matvec, ell_rmatvec
 
 
 def _local_sgd(indices, values, n: int, x, k0, tau: int, b: int, eta: float):
-    """τ local SGD steps on one team's rows, starting at step index k0."""
+    """τ local SGD steps on one team's rows, starting at step index k0.
+
+    Standalone reference for what the engine computes per team at the
+    s = 1 corner (used by tests as the manual oracle)."""
     m_local = indices.shape[0]
 
     def body(x, t):
@@ -38,7 +40,6 @@ def _local_sgd(indices, values, n: int, x, k0, tau: int, b: int, eta: float):
     return x
 
 
-@partial(jax.jit, static_argnames=("b", "tau", "rounds", "loss_every"))
 def run_fedavg(
     tp: TeamProblem,
     x0: jnp.ndarray,
@@ -48,28 +49,10 @@ def run_fedavg(
     rounds: int,
     loss_every: int = 0,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """``rounds`` outer iterations (K̃); each is τ local steps + average.
-
-    Returns (x, losses) with the full global objective sampled every
-    ``loss_every`` rounds.
-    """
+    """Engine corner (s=1): ``rounds`` outer iterations (K̃); each is τ
+    local steps + average. Returns (x, losses) with the full global
+    objective sampled every ``loss_every`` rounds."""
     if tp.rows_local % b:
         raise ValueError(f"local rows {tp.rows_local} must be divisible by b={b}")
-    gp = global_problem(tp)
-    local = jax.vmap(_local_sgd, in_axes=(0, 0, None, None, None, None, None, None))
-
-    chunk = loss_every if loss_every else rounds
-    n_chunks = max(rounds // chunk, 1)
-
-    def one_round(x, r):
-        xs = local(tp.indices, tp.values, tp.n, x, r * tau, tau, b, eta)
-        return jnp.mean(xs, axis=0), None
-
-    def outer(x, c):
-        x, _ = jax.lax.scan(one_round, x, c * chunk + jnp.arange(chunk))
-        return x, full_loss(gp, x)
-
-    x, losses = jax.lax.scan(outer, x0, jnp.arange(n_chunks))
-    if not loss_every:
-        losses = jnp.zeros((0,), losses.dtype)
-    return x, losses
+    sched = ParallelSGDSchedule.fedavg(tp.p, b, eta, tau, rounds, loss_every=loss_every)
+    return run_parallel_sgd(tp, x0, sched)

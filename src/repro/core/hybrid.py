@@ -1,5 +1,10 @@
 """HybridSGD — the paper's 2D-parallel SGD (§4.1).
 
+DEPRECATED module layout: ``run_hybrid_sgd`` is now a thin wrapper over
+the unified engine (repro.core.engine), which implements the general
+(p_r, s, τ) point directly — see that module for the algorithm
+description and the corner table.
+
 Processors form a p = p_r × p_c mesh. Each of the p_r row teams runs
 1D s-step SGD (Algorithm 3) on its local row block for τ inner
 iterations (τ/s bundles, one row-team Allreduce of (G, v) per bundle
@@ -7,62 +12,21 @@ across its p_c column ranks); every τ iterations the weight vector is
 averaged across row teams (one column Allreduce of n/p_c words per
 rank). Constraint: s ≤ τ and τ ≡ 0 (mod s).
 
-Corners recovered exactly (tested):
-  p_r = 1 (single team, averaging is identity)      → 1D s-step SGD
-  p_r = p, s = 1                                    → FedAvg
-  p_r = p, s = 1, τ = 1                             → synchronous MB-SGD
-
 The *numerics* depend only on (p_r, s, b, τ): p_c changes where columns
 live (communication), not what is computed — s-step is an algebraic
-identity. This module implements the exact simulated-rank semantics on
-one device (lax.map over row teams); repro.core.distributed implements
-the same algorithm with shard_map over a real 2D device mesh, and tests
-assert they agree.
+identity. repro.core.distributed executes the same schedule with
+shard_map over a real 2D device mesh, sharing the engine's bundle
+primitive, and tests assert the two agree.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.problem import full_loss, sigmoid_residual
-from repro.core.teams import TeamProblem, global_problem
+from repro.core.engine import ParallelSGDSchedule, run_parallel_sgd
+from repro.core.teams import TeamProblem
 
 
-def _team_sstep_round(indices, values, n: int, x, round_idx, s: int, b: int, tau: int, eta: float):
-    """τ inner iterations (= τ/s s-bundles) of Algorithm 3 on one team."""
-    m_local = indices.shape[0]
-    bundles = tau // s
-    sb = s * b
-
-    def bundle(x, t):
-        k0 = round_idx * bundles + t
-        start = (k0 * sb) % m_local
-        idx = jax.lax.dynamic_slice_in_dim(indices, start, sb, axis=0)
-        val = jax.lax.dynamic_slice_in_dim(values, start, sb, axis=0)
-        # densify the bundle rows (sb × n) for Gram + v; production path
-        # = Pallas BSR gram kernel (repro.kernels.gram)
-        dense = jnp.zeros((sb, n), val.dtype).at[jnp.arange(sb)[:, None], idx].add(val)
-        g = jnp.tril(dense @ dense.T, k=-1)
-        v = dense @ x
-
-        def inner(u_acc, j):
-            zj = jax.lax.dynamic_slice_in_dim(v, j * b, b) + (eta / b) * (
-                jax.lax.dynamic_slice_in_dim(g, j * b, b, axis=0) @ u_acc
-            )
-            uj = sigmoid_residual(zj)
-            return jax.lax.dynamic_update_slice_in_dim(u_acc, uj, j * b, axis=0), None
-
-        u, _ = jax.lax.scan(inner, jnp.zeros(sb, v.dtype), jnp.arange(s))
-        return x + (eta / b) * (dense.T @ u), None
-
-    x, _ = jax.lax.scan(bundle, x, jnp.arange(bundles))
-    return x
-
-
-@partial(jax.jit, static_argnames=("s", "b", "tau", "rounds", "loss_every"))
 def run_hybrid_sgd(
     tp: TeamProblem,
     x0: jnp.ndarray,
@@ -72,33 +36,16 @@ def run_hybrid_sgd(
     tau: int,
     rounds: int,
     loss_every: int = 0,
+    gram: str = "pallas",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """``rounds`` outer rounds; each = τ inner s-step iterations per row
-    team + one averaging step across the p_r teams."""
+    team + one averaging step across the p_r teams. ``gram`` selects
+    the bundle backend (engine.GRAM_METHODS)."""
     if tau % s:
         raise ValueError(f"tau={tau} must be divisible by s={s} (paper requires s ≤ τ)")
     if tp.rows_local % (s * b):
         raise ValueError(f"local rows {tp.rows_local} must be divisible by s·b={s * b}")
-    gp = global_problem(tp)
-
-    chunk = loss_every if loss_every else rounds
-    n_chunks = max(rounds // chunk, 1)
-
-    def one_round(x, r):
-        def team(args):
-            idx, val = args
-            return _team_sstep_round(idx, val, tp.n, x, r, s, b, tau, eta)
-
-        # lax.map (not vmap): teams run sequentially on one device, which
-        # bounds peak memory at one (sb × n) densified bundle.
-        xs = jax.lax.map(team, (tp.indices, tp.values))
-        return jnp.mean(xs, axis=0), None
-
-    def outer(x, c):
-        x, _ = jax.lax.scan(one_round, x, c * chunk + jnp.arange(chunk))
-        return x, full_loss(gp, x)
-
-    x, losses = jax.lax.scan(outer, x0, jnp.arange(n_chunks))
-    if not loss_every:
-        losses = jnp.zeros((0,), losses.dtype)
-    return x, losses
+    sched = ParallelSGDSchedule.hybrid(
+        tp.p, s, b, eta, tau, rounds, loss_every=loss_every, gram=gram
+    )
+    return run_parallel_sgd(tp, x0, sched)

@@ -1,5 +1,10 @@
 """Algorithm 1 — mini-batch SGD (the sequential baseline).
 
+DEPRECATED module layout: ``run_sgd`` is now a thin wrapper over the
+unified engine (repro.core.engine) at the corner p_r = 1, s = 1, τ = 1.
+``sgd_step``/``batch_rows`` remain the standalone single-step helpers
+(used by kernel tests and docs).
+
 Row sub-sampling is cyclic, i = (i + b) mod m, exactly as the paper
 (§5): it makes the sample sequence reproducible across solvers so the
 s-step ≡ SGD identity can be tested to floating-point error.
@@ -7,12 +12,11 @@ s-step ≡ SGD identity can be tested to floating-point error.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import LogisticProblem, full_loss, sigmoid_residual
+from repro.core.engine import ParallelSGDSchedule, run_parallel_sgd, single_team
+from repro.core.problem import LogisticProblem, sigmoid_residual
 from repro.sparse.ell import EllBlock, ell_matvec, ell_rmatvec
 
 
@@ -34,7 +38,6 @@ def sgd_step(ell: EllBlock, x: jnp.ndarray, k: jnp.ndarray, b: int, eta: float) 
     return x + (eta / b) * ell_rmatvec(batch, u)
 
 
-@partial(jax.jit, static_argnames=("b", "K", "loss_every"))
 def run_sgd(
     problem: LogisticProblem,
     x0: jnp.ndarray,
@@ -43,25 +46,12 @@ def run_sgd(
     K: int,
     loss_every: int = 0,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (x_K, losses) where losses is the full objective sampled
-    every ``loss_every`` iterations (empty if 0)."""
-    ell = problem.ya
-    if ell.rows % b:
-        raise ValueError(f"padded m={ell.rows} must be divisible by b={b}")
-
-    chunk = loss_every if loss_every else K
-    n_chunks, rem = divmod(K, chunk)
-    if rem:
+    """Engine corner (p_r=1, s=1, τ=1). Returns (x_K, losses) where
+    losses is the full objective sampled every ``loss_every``
+    iterations (empty if 0)."""
+    if problem.ya.rows % b:
+        raise ValueError(f"padded m={problem.ya.rows} must be divisible by b={b}")
+    if loss_every and K % loss_every:
         raise ValueError(f"K={K} must be divisible by loss_every={loss_every}")
-
-    def inner(x, k):
-        return sgd_step(ell, x, k, b, eta), None
-
-    def outer(x, c):
-        x, _ = jax.lax.scan(inner, x, c * chunk + jnp.arange(chunk))
-        return x, full_loss(problem, x)
-
-    x, losses = jax.lax.scan(outer, x0, jnp.arange(n_chunks))
-    if not loss_every:
-        losses = jnp.zeros((0,), losses.dtype)
-    return x, losses
+    sched = ParallelSGDSchedule.mb_sgd(b, eta, K, loss_every=loss_every)
+    return run_parallel_sgd(single_team(problem), x0, sched)

@@ -1,5 +1,9 @@
 """Algorithm 3 — s-step (communication-avoiding) SGD.
 
+DEPRECATED module layout: ``run_sstep_sgd`` is now a thin wrapper over
+the unified engine (repro.core.engine) at the corner p_r = 1, τ = s.
+``sstep_bundle`` remains as the standalone single-bundle helper.
+
 Recurrence unrolling: a bundle of s consecutive mini-batch steps is
 regrouped so that all matrix work happens up front —
 
@@ -19,39 +23,35 @@ This is an algebraic identity of Algorithm 1 (same sample sequence ⇒
 identical iterates up to FP error) — validated in tests. In the 1D
 distributed form the only communication is one Allreduce of (G, v) per s
 steps; Yᵀu is local under column partitioning.
+
+(G, v) routes through the scatter-free Pallas ELL-Gram kernel
+(repro.kernels.ell_gram); the old densify path lives on only as the
+parity oracle repro.kernels.ref.ell_gram_and_v_ref.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.problem import LogisticProblem, full_loss, sigmoid_residual
+from repro.core.engine import (
+    ParallelSGDSchedule,
+    bundle_gram_v,
+    inner_corrections,
+    run_parallel_sgd,
+    single_team,
+)
+from repro.core.problem import LogisticProblem
 from repro.core.sgd import batch_rows
-from repro.sparse.ell import EllBlock, ell_matvec, ell_rmatvec
+from repro.sparse.ell import EllBlock, ell_rmatvec
 
 
 def gram_and_v(bundle_vals: jnp.ndarray, bundle_idx: jnp.ndarray, n: int, x: jnp.ndarray):
-    """Return (G, v) for the dense-ified bundle rows.
+    """Return (G, v) for the ELL bundle rows — scatter-free.
 
-    The reference path densifies the sb ELL rows into (sb, n) — fine for
-    tests; the production path uses the Pallas gram kernel on BSR tiles
-    (repro.kernels). Here we avoid densifying by computing the Gram via
-    the ELL overlap directly: scatter rows to dense is O(sb·n) memory, so
-    instead use segment-sum on shared column ids.
-    """
-    sb, width = bundle_vals.shape
-    # Dense scatter per row into n is avoided: G[i,j] = Σ_c Y[i,c]Y[j,c].
-    # Build (sb, n) one-hot-free via scatter-add into a (sb, n) matrix
-    # would be O(sb·n); for small n (column-partitioned shards) that's
-    # acceptable and simple:
-    dense = jnp.zeros((sb, n), bundle_vals.dtype)
-    dense = dense.at[jnp.arange(sb)[:, None], bundle_idx].add(bundle_vals)
-    g = jnp.tril(dense @ dense.T, k=-1)  # strictly lower: only l<j corrections
-    v = dense @ x
-    return g, v
+    Kept for backwards compatibility (note the historical value-first
+    argument order); new code should call
+    repro.core.engine.bundle_gram_v directly."""
+    return bundle_gram_v(bundle_idx, bundle_vals, x, n)
 
 
 def sstep_bundle(
@@ -65,24 +65,11 @@ def sstep_bundle(
     """One outer iteration of Algorithm 3 (s fused steps), starting at
     global step index k·s (cyclic sampling)."""
     bundle = batch_rows(ell, k, s * b)  # rows [k·sb, k·sb + sb)
-    g, v = gram_and_v(bundle.values, bundle.indices, ell.n, x)
-
-    def inner(u_acc, j):
-        # z_j = v_j + (η/b) Σ_{l<j} G[j·b:(j+1)b, :] u_acc   (u_acc zero
-        # beyond filled entries, G strictly-lower ⇒ only l<j contribute)
-        zj = jax.lax.dynamic_slice_in_dim(v, j * b, b) + (eta / b) * (
-            jax.lax.dynamic_slice_in_dim(g, j * b, b, axis=0) @ u_acc
-        )
-        uj = sigmoid_residual(zj)
-        u_acc = jax.lax.dynamic_update_slice_in_dim(u_acc, uj, j * b, axis=0)
-        return u_acc, None
-
-    u0 = jnp.zeros(s * b, v.dtype)
-    u, _ = jax.lax.scan(inner, u0, jnp.arange(s))
-    return x + (eta / b) * ell_rmatvec(bundle, u)
+    g, v = bundle_gram_v(bundle.indices, bundle.values, x, ell.n)
+    u = inner_corrections(g, v, s, b, eta)
+    return x + (eta / b) * ell_rmatvec(bundle, u).astype(x.dtype)
 
 
-@partial(jax.jit, static_argnames=("s", "b", "K", "loss_every"))
 def run_sstep_sgd(
     problem: LogisticProblem,
     x0: jnp.ndarray,
@@ -91,25 +78,13 @@ def run_sstep_sgd(
     eta: float,
     K: int,
     loss_every: int = 0,
+    gram: str = "pallas",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """K total SGD-equivalent iterations = K/s bundles."""
-    ell = problem.ya
+    """Engine corner (p_r=1, τ=s): K total SGD-equivalent iterations =
+    K/s bundles. ``gram`` selects the bundle backend (engine.GRAM_METHODS)."""
     if K % s:
         raise ValueError(f"K={K} must be divisible by s={s}")
-    if ell.rows % (s * b):
-        raise ValueError(f"padded m={ell.rows} must be divisible by s·b={s * b}")
-    n_bundles = K // s
-    chunk = max(loss_every // s, 1) if loss_every else n_bundles
-    n_chunks = max(n_bundles // chunk, 1)
-
-    def inner(x, k):
-        return sstep_bundle(ell, x, k, s, b, eta), None
-
-    def outer(x, c):
-        x, _ = jax.lax.scan(inner, x, c * chunk + jnp.arange(chunk))
-        return x, full_loss(problem, x)
-
-    x, losses = jax.lax.scan(outer, x0, jnp.arange(n_chunks))
-    if not loss_every:
-        losses = jnp.zeros((0,), losses.dtype)
-    return x, losses
+    if problem.ya.rows % (s * b):
+        raise ValueError(f"padded m={problem.ya.rows} must be divisible by s·b={s * b}")
+    sched = ParallelSGDSchedule.sstep(s, b, eta, K, loss_every=loss_every, gram=gram)
+    return run_parallel_sgd(single_team(problem), x0, sched)

@@ -1,8 +1,8 @@
 """Row-team stacking: partition (A, y) into p row blocks with uniform
 padded shapes and stack them along a leading axis.
 
-The simulated-rank implementations (FedAvg, HybridSGD) vmap the local
-solver over this axis — giving *exact* SPMD semantics on one device.
+The unified engine (repro.core.engine) maps its per-team inner loop
+over this axis — giving *exact* SPMD semantics on one device.
 All teams share one ELL width and one padded row count (SPMD uniformity;
 this is where nnz imbalance κ becomes padded compute, DESIGN.md §5.3).
 """

@@ -2,15 +2,20 @@
 
   bsr_matmul — block-sparse matmul, scalar-prefetched block indices
                (the MKL-CSR SpMV, rethought for the MXU)
-  gram       — fused tril(YYᵀ) + Y·x syrk (the mkl_sparse_syrkd hot
-               spot of Algorithm 3)
+  ell_gram   — the engine's bundle primitive: fused tril(YYᵀ) + Y·x
+               straight from ELL rows, scatter-free (the
+               mkl_sparse_syrkd hot spot of Algorithm 3)
+  gram       — the same syrk for an already-dense Y panel
   sstep_inner — the s-step correction loop fused into one launch
                (G, v, u stay VMEM-resident across all s steps)
 
 ops.py: jit'd wrappers (SparseLinearOp bundles A and BSR(Aᵀ));
-ref.py: pure-jnp oracles. interpret=True on CPU, =False on real TPU.
+ref.py: pure-jnp oracles — including the retired (sb × n) densify
+bundle path, kept only as the parity oracle.
+interpret=True on CPU, =False on real TPU.
 """
 
+from repro.kernels.ell_gram import ell_gram_and_v, ell_gram_and_v_blocked
 from repro.kernels.ops import (
     SparseLinearOp,
     sparse_linear_op,
@@ -23,6 +28,8 @@ from repro.kernels.sstep_inner import sstep_inner
 
 __all__ = [
     "SparseLinearOp",
+    "ell_gram_and_v",
+    "ell_gram_and_v_blocked",
     "sparse_linear_op",
     "spmm",
     "spmv",

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: fused s-bundle (G, v) straight from ELL rows.
+
+This is the engine's bundle primitive (Algorithm 3 lines 5-8 — the
+``mkl_sparse_syrkd`` + SpMV hot spot) without ever materializing the
+dense (sb × n) bundle in HBM. The old core solvers scattered the bundle
+into a dense matrix every inner iteration (O(sb·n) HBM traffic per
+bundle); here the dense panel only ever exists as a (sb × bk) VMEM tile,
+built on the fly from the ELL (indices, values) pair:
+
+  for each column panel k of width bk:
+      panel[r, c] = Σ_a val[r, a] · [idx[r, a] == k·bk + c]
+      G += panel @ panelᵀ          (MXU rank-k update)
+      v += panel @ x[k·bk : k·bk+bk]
+
+The panel build is a compare-against-iota one-hot contraction — an MXU/
+VPU-friendly formulation of scatter (Pallas TPU has no in-kernel
+scatter). Cost per bundle is O(sb·w·n) for the expansion plus
+O(sb²·n) for the syrk, vs O(sb·n) HBM *traffic* for the dense path —
+on TPU the expansion is compute against VMEM-resident data, while the
+dense path is a scatter into HBM plus a full re-stream. Arithmetic
+caveat: the expansion term dominates the syrk when the ELL width w
+exceeds sb, so heavy-tailed rows (w ≫ s·b, e.g. the url dataset)
+favor a wider bundle or the dense oracle off-TPU — benchmarks
+bench_kernels.py measures both sides.
+
+The strict-lower mask (only l < j corrections are applied by the s-step
+inner loop) lands on the final panel. Accumulation is float32
+(MXU-faithful) regardless of input dtype.
+
+VMEM per step: sb·w (idx + val) + sb·bk (one-hot workspace) + sb·sb (G)
++ bk (x panel) words.
+
+Oracle: repro.kernels.ref.ell_gram_and_v_ref (the retired densify path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prep_panels(values, x, n: int, bk: int):
+    """Shared preamble for both backends: accumulation dtype + x padded
+    to whole panels. f32 accumulation (MXU-faithful) for narrow dtypes;
+    f64 stays f64 so the paper's FP64 Gram-conditioning runs keep their
+    precision."""
+    acc = jnp.float64 if values.dtype == jnp.float64 else jnp.float32
+    n_pad = -(-n // bk) * bk
+    x = x.astype(acc)
+    if n_pad != n:
+        x = jnp.pad(x, (0, n_pad - n))
+    return acc, x, n_pad // bk
+
+
+def panel_from_ell(indices, values, k, bk: int, acc_dtype) -> jnp.ndarray:
+    """Expand the ELL bundle's column panel k into a dense (sb, bk) tile.
+
+    Panel-local one-hot contraction: entries outside [k·bk, (k+1)·bk)
+    match no lane and vanish; ELL pad entries (idx 0, val 0) contribute
+    zero value. Shared by the Pallas kernel body and the pure-jnp
+    blocked path (shard_map-safe)."""
+    local = indices - k * bk  # (sb, w)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
+    onehot = (local[:, :, None] == lanes).astype(acc_dtype)  # (sb, w, bk)
+    return jax.lax.dot_general(
+        values.astype(acc_dtype)[:, None, :],  # (sb, 1, w)
+        onehot,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=acc_dtype,
+    )[:, 0, :]  # (sb, bk)
+
+
+def _ell_gram_kernel(idx_ref, val_ref, x_ref, g_ref, v_ref, *, n_panels: int, bk: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    panel = panel_from_ell(idx_ref[...], val_ref[...], k, bk, g_ref.dtype)  # (sb, bk)
+    g_ref[...] += jnp.dot(panel, panel.T, preferred_element_type=g_ref.dtype)
+    v_ref[...] += jnp.dot(panel, x_ref[...], preferred_element_type=v_ref.dtype)
+
+    @pl.when(k == n_panels - 1)
+    def _mask():
+        sb = g_ref.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (sb, sb), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (sb, sb), 1)
+        g_ref[...] = jnp.where(row > col, g_ref[...], 0.0)
+
+
+def ell_gram_and_v(
+    indices: jnp.ndarray,  # (sb, w) int32
+    values: jnp.ndarray,  # (sb, w)
+    x: jnp.ndarray,  # (n,)
+    *,
+    n: int,
+    bk: int = 512,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(G, v) = (tril(Y Yᵀ, -1), Y·x) for the ELL bundle Y — scatter-free.
+
+    ``n`` is the (local) column count; x is zero-padded to a multiple of
+    ``bk`` so every grid step sees a full panel.
+    """
+    sb, w = values.shape
+    acc, x, n_panels = _prep_panels(values, x, n, bk)
+
+    g, v = pl.pallas_call(
+        functools.partial(_ell_gram_kernel, n_panels=n_panels, bk=bk),
+        grid=(n_panels,),
+        in_specs=[
+            pl.BlockSpec((sb, w), lambda k: (0, 0)),
+            pl.BlockSpec((sb, w), lambda k: (0, 0)),
+            pl.BlockSpec((bk, 1), lambda k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((sb, sb), lambda k: (0, 0)),
+            pl.BlockSpec((sb, 1), lambda k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sb, sb), acc),
+            jax.ShapeDtypeStruct((sb, 1), acc),
+        ],
+        interpret=interpret,
+    )(indices, values.astype(acc), x[:, None])
+    return g, v[:, 0]
+
+
+def ell_gram_and_v_blocked(
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    n: int,
+    bk: int = 512,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pure-jnp panel streaming — same scatter-free math as the Pallas
+    kernel, expressed as a lax.scan over column panels.
+
+    Used where a pallas_call cannot run (inside shard_map on the 2D
+    device mesh); the VMEM-tile structure becomes an XLA loop whose
+    working set is one (sb, bk) panel."""
+    sb, w = values.shape
+    acc, x, n_panels = _prep_panels(values, x, n, bk)
+
+    def panel_step(carry, k):
+        g, v = carry
+        panel = panel_from_ell(indices, values, k, bk, acc)
+        xblk = jax.lax.dynamic_slice_in_dim(x, k * bk, bk)
+        return (
+            g + jnp.dot(panel, panel.T, preferred_element_type=acc),
+            v + jnp.dot(panel, xblk, preferred_element_type=acc),
+        ), None
+
+    (g, v), _ = jax.lax.scan(
+        panel_step,
+        (jnp.zeros((sb, sb), acc), jnp.zeros((sb,), acc)),
+        jnp.arange(n_panels),
+    )
+    return jnp.tril(g, k=-1), v

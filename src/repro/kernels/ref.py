@@ -29,3 +29,20 @@ def gram_and_v_ref(y, x) -> tuple[jnp.ndarray, jnp.ndarray]:
         jnp.tril(jnp.dot(y, y.T, preferred_element_type=jnp.float32), k=-1),
         jnp.dot(y, x, preferred_element_type=jnp.float32),
     )
+
+
+def densify_bundle_ref(indices, values, n: int) -> jnp.ndarray:
+    """Scatter the (sb, w) ELL bundle into a dense (sb, n) matrix.
+
+    This is the retired inner-loop path of the pre-engine solvers, kept
+    as the parity oracle for the scatter-free ELL Gram kernel (and as
+    the dense baseline in benchmarks/bench_kernels.py)."""
+    sb = values.shape[0]
+    dense = jnp.zeros((sb, n), values.dtype)
+    return dense.at[jnp.arange(sb)[:, None], indices].add(values)
+
+
+def ell_gram_and_v_ref(indices, values, x, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(tril(YYᵀ,-1), Y·x) via the dense scatter — the bundle oracle."""
+    dense = densify_bundle_ref(indices, values.astype(jnp.float32), n)
+    return gram_and_v_ref(dense, x.astype(jnp.float32))

@@ -35,6 +35,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import REGISTRY
 from repro.launch import roofline as rl
 from repro.launch.input_specs import (
@@ -138,7 +139,7 @@ def run_combo(arch: str, shape_name: str, mesh, *, skip_roofline: bool = False) 
         return rec
 
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         # 1) full-depth scanned compile — memory proof
         lowered = lower_step(cfg, shape, mesh, unroll=False)
         compiled = lowered.compile()

@@ -125,13 +125,14 @@ def make_pod_sync_step(mesh):
         # is a pmean expressed as a resharding-free global mean when
         # params carry no pod dim — here we mark it with an explicit
         # collective via shard_map over the pod axis.
-        smap = jax.shard_map(
+        from repro.compat import shard_map
+
+        smap = shard_map(
             lambda p: jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), p),
             mesh=mesh,
-            axis_names=frozenset({"pod"}),
             in_specs=P(),
             out_specs=P(),
-            check_vma=False,
+            axis_names={"pod"},
         )
         return smap(params)
 

@@ -37,10 +37,14 @@ def main() -> None:
         shape_s, axes_s = args.mesh.split(":")
         shape = tuple(int(x) for x in shape_s.split("x"))
         axes = tuple(axes_s.split(","))
-        mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        from repro import compat
+
+        mesh = compat.make_mesh(shape, axes)
 
     if mesh is not None:
-        jax.sharding.set_mesh(mesh)
+        from repro import compat
+
+        compat.set_mesh(mesh)
     report = train(
         cfg,
         steps=args.steps,

@@ -318,7 +318,9 @@ def moe(p, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
     expert-parallel all_to_all path (repro.models.moe_ep) is used;
     the local path below serves single-device runs and smoke tests.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro import compat
+
+    mesh = compat.get_abstract_mesh()
     if mesh is not None and not mesh.empty and cfg.sharding_profile == "tp":
         sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
         if sizes.get("model", 1) > 1:

@@ -84,7 +84,9 @@ def _moe_ep_body(cfg: ArchConfig, t_all, router, wg, wu, wd, axis: str, cf: floa
     """Manual region, expert-parallel path. t_all: (T_loc, d) replicated
     over ``axis``; wg/wu/wd: this rank's (E/m, d, ffe) expert slices."""
     e = cfg.moe
-    m = jax.lax.axis_size(axis)
+    from repro import compat
+
+    m = compat.axis_size(axis)
     r = jax.lax.axis_index(axis)
     d = t_all.shape[-1]
     k = e.top_k
@@ -135,7 +137,9 @@ def _moe_ep_body(cfg: ArchConfig, t_all, router, wg, wu, wd, axis: str, cf: floa
 def _moe_repl_body(cfg: ArchConfig, t_all, router, wg, wu, wd, axis: str):
     """Fallback: experts replicated, tokens split over ``axis``."""
     e = cfg.moe
-    m = jax.lax.axis_size(axis)
+    from repro import compat
+
+    m = compat.axis_size(axis)
     r = jax.lax.axis_index(axis)
     d = t_all.shape[-1]
     k = e.top_k
@@ -158,12 +162,11 @@ def moe_ep(cfg: ArchConfig, p: dict, x: jnp.ndarray, cf: float = 2.0) -> jnp.nda
     """Expert-parallel MoE over the active mesh. x: (B, S, d)."""
     e = cfg.moe
     B, S, d = x.shape
-    am = jax.sharding.get_abstract_mesh()
+    from repro import compat
+
+    am = compat.get_abstract_mesh()
     sizes = dict(zip(am.axis_names, am.axis_sizes))
-    manual = {
-        name for name, ty in zip(am.axis_names, am.axis_types)
-        if ty == jax.sharding.AxisType.Manual
-    }
+    manual = compat.manual_axes(am)
     m = sizes.get("model", 1)
     batch_axes = tuple(
         a for a in ("pod", "data")
@@ -208,13 +211,12 @@ def moe_ep(cfg: ArchConfig, p: dict, x: jnp.ndarray, cf: float = 2.0) -> jnp.nda
         wspec = P("model", "data") if fsdp else P("model")
     else:
         wspec = P()
-    smap = jax.shard_map(
+    smap = compat.shard_map(
         body,
         mesh=am,
-        axis_names=frozenset(batch_axes) | {"model"},
         in_specs=(P(bspec_entry), P(), wspec, wspec, wspec),
         out_specs=P(bspec_entry),
-        check_vma=False,
+        axis_names=frozenset(batch_axes) | {"model"},
     )
     y = smap(x, p["router"].astype(x.dtype), p["w_gate_e"], p["w_up_e"], p["w_down_e"])
 

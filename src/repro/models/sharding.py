@@ -62,15 +62,12 @@ def _active_axes() -> frozenset[str]:
     """Mesh axes usable in with_sharding_constraint here: Auto/Explicit
     only — axes that are Manual (inside an enclosing shard_map, e.g. the
     hybrid-2D "pod" axis) cannot appear in a constraint."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro import compat
+
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return frozenset()
-    manual = {
-        name
-        for name, ty in zip(mesh.axis_names, mesh.axis_types)
-        if ty == jax.sharding.AxisType.Manual
-    }
-    return frozenset(mesh.axis_names) - manual
+    return frozenset(mesh.axis_names) - compat.manual_axes(mesh)
 
 
 def spec_for(*dims: str | None, axes: frozenset[str] | None = None) -> P:
@@ -95,7 +92,9 @@ def shard(x: jax.Array, *dims: str | None) -> jax.Array:
     active = _active_axes()
     if not active:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro import compat
+
+    mesh = compat.get_abstract_mesh()
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
     rules = _rules()
     entries: list = []

@@ -18,22 +18,28 @@ The s-step Gram identity is exact only for the convex core; here the
 row-team inner solver is plain local SGD (the FedAvg limit), which is
 the honest NN analogue (noted in DESIGN.md §4).
 
-Implementation: jax.shard_map with axis_names={"pod"} — the pod axis is
-manual (so per-pod params can drift, check_vma=False) while "data" and
-"model" stay auto-sharded (GSPMD inserts the intra-pod collectives).
-On a single-pod mesh this degenerates to standard 2D data×model
-training (n_pods = 1).
+Implementation: shard_map with axis_names={"pod"} — the pod axis is
+manual (so per-pod params can drift; replication checking off) while
+"data" and "model" stay auto-sharded (GSPMD inserts the intra-pod
+collectives). On a single-pod mesh this degenerates to standard 2D
+data×model training (n_pods = 1).
+
+The schedule knobs are the engine's ParallelSGDSchedule
+(repro.core.engine) — the same (p_r, p_c, s, τ) object drives the
+convex solver family and this trainer, with p_r ↦ n_pods and τ ↦ the
+pod-sync period.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.core.engine import ParallelSGDSchedule
 from repro.optim.sgd import Optimizer
 
 
@@ -80,13 +86,12 @@ def make_hybrid_train_step(
 
         return jax.jit(train_step, donate_argnums=(0,))
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         local_step,
         mesh=mesh,
-        axis_names=frozenset({"pod"}),
         in_specs=(P("pod"), P("pod"), P("pod")),
         out_specs=(P("pod"), P("pod"), P("pod")),
-        check_vma=False,
+        axis_names={"pod"},
     )
 
     def train_step(state, batch):
@@ -112,11 +117,11 @@ def make_sync_step(mesh):
     return jax.jit(sync, donate_argnums=(0,))
 
 
-@dataclasses.dataclass
-class HybridSchedule:
-    """(s, b, τ) for the NN trainer: b is the per-pod batch; s maps to
-    gradient-accumulation microsteps (the inexact NN analogue of the
-    s-step bundle); τ is the pod-sync period."""
+def HybridSchedule(tau: int = 10, s: int = 1) -> ParallelSGDSchedule:
+    """Deprecated constructor preserving the old (tau, s) signature.
 
-    tau: int = 10
-    s: int = 1  # grad-accumulation microsteps per optimizer step
+    The NN trainer now shares the engine's schedule object: p_r ↦
+    n_pods, b ↦ per-pod batch, s ↦ gradient-accumulation microsteps
+    (the inexact NN analogue of the s-step bundle), τ ↦ the pod-sync
+    period. New code should build ParallelSGDSchedule directly."""
+    return ParallelSGDSchedule(s=s, tau=tau)

@@ -3,6 +3,11 @@
 Wires: config → params → hybrid-2D train step (the paper's technique:
 τ local steps per pod, then a parameter-averaging sync) → data stream →
 metrics → checkpoints.
+
+The sync cadence comes from the engine's ParallelSGDSchedule — the
+transformer workload and the logistic-regression workload share one
+schedule object (τ means the same thing in both; see
+docs/paper_map.md).
 """
 
 from __future__ import annotations
@@ -14,6 +19,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import ParallelSGDSchedule
 from repro.models.config import ArchConfig
 from repro.models.init import init_params
 from repro.models.transformer import lm_loss
@@ -43,9 +49,15 @@ def train(
     log_every: int = 10,
     seed: int = 0,
     dtype=jnp.float32,
+    schedule: ParallelSGDSchedule | None = None,
 ) -> TrainReport:
     """Train cfg on the synthetic Markov stream. With a multi-pod mesh
-    this runs the full hybrid-2D schedule (pod-local steps + τ-sync)."""
+    this runs the full hybrid-2D schedule (pod-local steps + τ-sync).
+
+    ``schedule`` is the engine's knob object; this loop consumes its τ
+    (pod-sync cadence) and validates p_r against the mesh. s maps to
+    gradient-accumulation microsteps in launch.steps.make_train_step,
+    not here; b is the ``batch`` argument."""
     opt = opt or adamw(3e-4)
     params = init_params(cfg, jax.random.PRNGKey(seed), dtype=dtype)
     opt_state = opt.init(params)
@@ -53,6 +65,12 @@ def train(
     n_pods = 1
     if mesh is not None and "pod" in mesh.axis_names:
         n_pods = dict(zip(mesh.axis_names, mesh.axis_sizes))["pod"]
+    if schedule is not None:
+        if schedule.p_r not in (1, n_pods):
+            raise ValueError(
+                f"schedule.p_r={schedule.p_r} but the mesh has {n_pods} pods"
+            )
+        tau = schedule.tau
 
     def loss_fn(p, tokens, targets):
         return lm_loss(cfg, p, tokens, targets)

@@ -35,6 +35,7 @@ def test_hybrid_distributed_matches_simulated(partitioner, mesh_shape):
     out = run_in_subprocess(
         f"""
         import numpy as np, jax, jax.numpy as jnp
+        from repro import compat
         from repro.sparse.synthetic import make_skewed_csr
         from repro.core.teams import stack_row_teams
         from repro.core.hybrid import run_hybrid_sgd
@@ -45,8 +46,7 @@ def test_hybrid_distributed_matches_simulated(partitioner, mesh_shape):
         y = np.where(rng.random(256) < 0.5, 1.0, -1.0)
         s, b, tau, eta, rounds = 2, 4, 8, 0.05, 3
         p_r, p_c = {p_r}, {p_c}
-        mesh = jax.make_mesh((p_r, p_c), ("rows", "cols"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((p_r, p_c), ("rows", "cols"))
         tp = stack_row_teams(A, y, p_r, row_multiple=s * b)
         x_sim, _ = run_hybrid_sgd(tp, jnp.zeros(100), s, b, eta, tau, rounds)
         prob, cp = build_2d_problem(A, y, p_r, p_c, "{partitioner}", row_multiple=s * b)
@@ -65,6 +65,7 @@ def test_distributed_fedavg_corner():
     out = run_in_subprocess(
         """
         import numpy as np, jax, jax.numpy as jnp
+        from repro import compat
         from repro.sparse.synthetic import make_skewed_csr
         from repro.core.teams import stack_row_teams
         from repro.core.fedavg import run_fedavg
@@ -74,8 +75,7 @@ def test_distributed_fedavg_corner():
         A = make_skewed_csr(256, 100, 12, 0.8, seed=3)
         y = np.where(rng.random(256) < 0.5, 1.0, -1.0)
         b, tau, eta, rounds = 4, 8, 0.05, 3
-        mesh = jax.make_mesh((8, 1), ("rows", "cols"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((8, 1), ("rows", "cols"))
         tp = stack_row_teams(A, y, 8, row_multiple=b)
         x_f, _ = run_fedavg(tp, jnp.zeros(100), b, eta, tau, rounds)
         prob, cp = build_2d_problem(A, y, 8, 1, "rows", row_multiple=b)

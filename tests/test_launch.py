@@ -108,7 +108,9 @@ def test_param_pspecs_cover_tree(arch):
 
     cfg = resolve_config(arch, SHAPES["train_4k"])
     pshape = params_shape(cfg)
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.compat import abstract_mesh
+
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     specs = param_pspecs(cfg, pshape, mesh)
     flat_p = jax.tree.leaves(pshape)
     flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))

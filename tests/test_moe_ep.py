@@ -12,6 +12,7 @@ def test_moe_ep_matches_local():
     out = run_in_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs import get_config, reduced
         from repro.models.init import init_params
         from repro.models import blocks
@@ -24,9 +25,8 @@ def test_moe_ep_matches_local():
 
         y_local = blocks.moe(layer, cfg, x)  # no mesh -> local path
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.sharding.set_mesh(mesh):
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
+        with compat.set_mesh(mesh):
             y_ep = jax.jit(lambda l, x: moe_ep(cfg, l, x, cf=8.0))(layer, x)
         diff = float(jnp.abs(y_ep - y_local).max())
         scale = float(jnp.abs(y_local).max())
@@ -45,6 +45,7 @@ def test_moe_ep_fallback_nondivisible_experts():
     out = run_in_subprocess(
         """
         import dataclasses, jax, jax.numpy as jnp
+        from repro import compat
         from repro.configs import get_config, reduced
         from repro.models.config import MoEConfig
         from repro.models.init import init_params
@@ -57,9 +58,8 @@ def test_moe_ep_fallback_nondivisible_experts():
         layer = jax.tree.map(lambda a: a[0], params["layers"][0])
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
         y_local = blocks.moe(layer, cfg, x)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.sharding.set_mesh(mesh):
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
+        with compat.set_mesh(mesh):
             y_ep = jax.jit(lambda l, x: moe_ep(cfg, l, x))(layer, x)
         diff = float(jnp.abs(y_ep - y_local).max())
         assert diff < 1e-4, diff
@@ -76,6 +76,7 @@ def test_moe_ep_decode_shape():
     out = run_in_subprocess(
         """
         import jax, jax.numpy as jnp
+        from repro import compat
         from repro.configs import get_config, reduced
         from repro.models.init import init_params
         from repro.models import blocks
@@ -86,9 +87,8 @@ def test_moe_ep_decode_shape():
         layer = jax.tree.map(lambda a: a[0], params["layers"][0])
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, cfg.d_model), jnp.float32)
         y_local = blocks.moe(layer, cfg, x)
-        mesh = jax.make_mesh((1, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.sharding.set_mesh(mesh):
+        mesh = compat.make_mesh((1, 8), ("data", "model"))
+        with compat.set_mesh(mesh):
             y_ep = jax.jit(lambda l, x: moe_ep(cfg, l, x, cf=8.0))(layer, x)
         diff = float(jnp.abs(y_ep - y_local).max())
         assert diff < 1e-4, diff

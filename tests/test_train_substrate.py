@@ -67,6 +67,7 @@ def test_hybrid2d_two_pods_matches_manual_local_sgd():
     out = run_in_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs import get_config, reduced
         from repro.models.init import init_params
         from repro.models.transformer import lm_loss
@@ -76,15 +77,14 @@ def test_hybrid2d_two_pods_matches_manual_local_sgd():
         cfg = reduced(get_config("qwen2.5-3b"))
         params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
         opt = sgd(0.1)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
         tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
         targets = jnp.roll(tokens, -1, axis=1)
 
         def loss_fn(p, tok, tgt):
             return lm_loss(cfg, p, tok, tgt)
 
-        jax.sharding.set_mesh(mesh)
+        compat.set_mesh(mesh)
         step = make_hybrid_train_step(mesh, loss_fn, opt)
         sync = make_sync_step(mesh)
         st = (stack_for_pods(params, 2), stack_for_pods(opt.init(params), 2))
@@ -116,6 +116,7 @@ def test_hybrid2d_pods_drift_between_syncs():
     out = run_in_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs import get_config, reduced
         from repro.models.init import init_params
         from repro.models.transformer import lm_loss
@@ -125,9 +126,8 @@ def test_hybrid2d_pods_drift_between_syncs():
         cfg = reduced(get_config("gemma-2b"))
         params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
         opt = sgd(0.1)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-        jax.sharding.set_mesh(mesh)
+        mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        compat.set_mesh(mesh)
         tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
         targets = jnp.roll(tokens, -1, axis=1)
         step = make_hybrid_train_step(mesh, lambda p, a, b: lm_loss(cfg, p, a, b), opt)
