@@ -6,17 +6,20 @@ Two reproductions:
       stats — url must be U-shaped with an interior optimum; news20 and
       rcv1 must be monotone with the optimum at the 1D s-step corner;
   (b) measured CPU wall time of the simulated-rank solver on the scaled
-      url-sm dataset across p_r ∈ {1, 2, 4, 8} (fixed total work).
+      url-sm dataset across p_r ∈ {1, 2, 4, 8} (fixed total work), each
+      point an ``ExperimentSpec`` through the repro.api front door.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, time_fn
-from repro.core import run_hybrid_sgd, stack_row_teams
+from benchmarks.common import emit
+from repro.api import ExperimentSpec, MeshSpec
+from repro.api import run as api_run
 from repro.costmodel import PERLMUTTER, HybridConfig, hybrid_epoch_cost
-from repro.sparse.synthetic import DATASET_STATS, make_dataset
+from repro.core import ParallelSGDSchedule
+from repro.sparse.synthetic import DATASET_STATS
 
 
 def run() -> None:
@@ -36,12 +39,16 @@ def run() -> None:
             emit(f"fig5/model/{name}/pr={p_r}", t * 1e6, f"best_pr={best_pr};shape={shape}")
 
     # (b) measured on CPU: simulated-rank solver, fixed epoch work
-    ds = make_dataset("url-sm", seed=0)
     s, b, tau, eta = 4, 8, 8, 0.05
     for p_r in (1, 2, 4, 8):
-        tp = stack_row_teams(ds.A, ds.y, p_r, row_multiple=s * b)
-        x0 = jnp.zeros(ds.A.n)
-        t = time_fn(lambda: run_hybrid_sgd(tp, x0, s, b, eta, tau, 1)[0], repeats=3, warmup=1)
+        spec = ExperimentSpec(
+            dataset="url-sm",
+            schedule=ParallelSGDSchedule.hybrid(p_r, s, b, eta, tau, rounds=1),
+            mesh=MeshSpec(p_r=p_r),
+            name=f"fig5-pr{p_r}",
+        )
+        api_run(spec)  # warmup: jit compile (the front door memoizes the dataset)
+        t = float(np.mean([api_run(spec).wall_time_s for _ in range(3)]))
         # simulated ranks execute sequentially on one CPU; wall/p_r is
         # the parallel per-team proxy
         emit(f"fig5/measured-cpu/url-sm/pr={p_r}", t / p_r * 1e6,

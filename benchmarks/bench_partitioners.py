@@ -12,10 +12,12 @@ Three measurements per dataset:
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, time_fn
-from repro.core import run_hybrid_sgd, stack_row_teams
+from benchmarks.common import emit
+from repro.api import ExperimentSpec, MeshSpec
+from repro.api import run as api_run
+from repro.core import ParallelSGDSchedule
 from repro.costmodel import PERLMUTTER, PartitionerProfile, rank_partitioners
 from repro.sparse.partition import PARTITIONERS, partition_columns, partition_stats
 from repro.sparse.synthetic import make_dataset
@@ -51,13 +53,17 @@ def run() -> None:
             emit(f"table9/predicted/{name}/{nm}", bd.total * 1e6, f"rank_order={order}")
 
     # (c) measured per-iteration on CPU (simulated-rank solver)
-    ds = make_dataset("url-sm", seed=0)
     s, b, tau = 4, 8, 8
     for kind in PARTITIONERS:
         # partitioner affects the distributed layout; the simulated-rank
-        # numerics are partition-independent, so time the distributed
-        # data build + a fixed solver round as the per-iteration proxy
-        tp = stack_row_teams(ds.A, ds.y, 4, row_multiple=s * b)
-        x0 = jnp.zeros(ds.A.n)
-        t = time_fn(lambda: run_hybrid_sgd(tp, x0, s, b, 0.05, tau, 1)[0], repeats=3, warmup=1)
+        # numerics are partition-independent, so time a fixed front-door
+        # solver round as the per-iteration proxy
+        spec = ExperimentSpec(
+            dataset="url-sm",
+            schedule=ParallelSGDSchedule.hybrid(4, s, b, 0.05, tau, rounds=1),
+            mesh=MeshSpec(p_r=4, partitioner=kind),
+            name=f"table9-{kind}",
+        )
+        api_run(spec)  # warmup: jit compile (the front door memoizes the dataset)
+        t = float(np.mean([api_run(spec).wall_time_s for _ in range(3)]))
         emit(f"table9/measured-cpu/url-sm/{kind}", t / tau * 1e6, "per-inner-iter")

@@ -8,93 +8,65 @@ cluster-level claim (53× on url etc.) is carried by the cost model
 
 Solvers run at each one's paper-style configuration on url-sm (sparse,
 high-dimensional, column-skewed — HybridSGD's home regime) and
-epsilon-sm (dense — FedAvg's home regime).
+epsilon-sm (dense — FedAvg's home regime), every one an
+``ExperimentSpec`` through the repro.api front door.
 """
 
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from benchmarks.common import emit
-from repro.core import (
-    ParallelSGDSchedule,
-    make_problem,
-    run_parallel_sgd,
-    single_team,
-    stack_row_teams,
-)
-from repro.sparse.synthetic import make_dataset
+from repro.api import ExperimentSpec, MeshSpec
+from repro.api import run as api_run
+from repro.core import ParallelSGDSchedule
 
 ETA = 1.0
 
 
-def _time_to_target(run_traced, target: float, max_rounds: int = 60):
-    """One timed run with a per-round loss trace; time-to-target =
-    (first crossing round / max_rounds) × total wall. Single
-    compilation, correct cyclic sample sequence."""
-    t0 = time.perf_counter()
-    losses = np.asarray(run_traced(max_rounds))
-    total = time.perf_counter() - t0
-    hit = np.nonzero(losses <= target)[0]
-    if len(hit):
-        r = int(hit[0]) + 1
-        return total * r / max_rounds, r, float(losses[hit[0]])
-    return total, max_rounds, float(losses[-1])
+def _time_to_target(spec: ExperimentSpec, target: float):
+    """One front-door run (single compilation, correct cyclic sample
+    sequence); the crossing arithmetic lives on RunReport."""
+    t, r, loss, _hit = api_run(spec).time_to_target(target)
+    return t, r, loss
 
 
 def run() -> None:
     # targets calibrated to the slower solver's 60-round terminal loss
     # (the paper's own calibration protocol, §7.5)
     for ds_name, target in (("url-sm", 0.675), ("epsilon-sm", 0.54)):
-        ds = make_dataset(ds_name, seed=0)
         s, b, tau = 4, 16, 16
         p_r_hybrid = 2
         p_fed = 8
+        R = 60
 
-        # One engine, three corners of the (p_r, s, τ) family. This
+        # One front door, three corners of the (p_r, s, τ) family. This
         # bench measures *sample efficiency* (rounds to target) on
         # simulated ranks, so the bundle backend is pinned to the dense
         # oracle: on these paper-scale shapes (url-sm ELL width ≫ sb)
         # the scatter-free expansion is MXU work that interpret mode
         # serializes on CPU — kernel wall-clock is bench_kernels' job.
-        x0 = jnp.zeros(ds.A.n)
+        def spec(schedule, p_r=1, name=""):
+            return ExperimentSpec(dataset=ds_name, schedule=schedule,
+                                  mesh=MeshSpec(p_r=p_r), row_multiple=s * b,
+                                  name=name)
 
-        # FedAvg at p=8
-        tp_f = stack_row_teams(ds.A, ds.y, p_fed, row_multiple=b)
-
-        def fed_run(R, _tp=tp_f, _x0=x0):
-            sched = ParallelSGDSchedule.fedavg(p_fed, b, ETA, tau, rounds=R, loss_every=1)
-            return run_parallel_sgd(_tp, _x0, sched)[1]
-
-        t_f, r_f, l_f = _time_to_target(fed_run, target)
+        t_f, r_f, l_f = _time_to_target(
+            spec(ParallelSGDSchedule.fedavg(p_fed, b, ETA, tau, rounds=R, loss_every=1),
+                 p_r=p_fed, name="fedavg"),
+            target)
         emit(f"table11/{ds_name}/fedavg", t_f * 1e6, f"rounds={r_f};loss={l_f:.4f}")
 
-        # HybridSGD at p_r=2
-        tp_h = stack_row_teams(ds.A, ds.y, p_r_hybrid, row_multiple=s * b)
-
-        def hyb_run(R, _tp=tp_h, _x0=x0):
-            sched = ParallelSGDSchedule.hybrid(
-                p_r_hybrid, s, b, ETA, tau, rounds=R, loss_every=1, gram="dense"
-            )
-            return run_parallel_sgd(_tp, _x0, sched)[1]
-
-        t_h, r_h, l_h = _time_to_target(hyb_run, target)
+        t_h, r_h, l_h = _time_to_target(
+            spec(ParallelSGDSchedule.hybrid(p_r_hybrid, s, b, ETA, tau, rounds=R,
+                                            loss_every=1, gram="dense"),
+                 p_r=p_r_hybrid, name="hybrid"),
+            target)
         emit(f"table11/{ds_name}/hybrid", t_h * 1e6, f"rounds={r_h};loss={l_h:.4f}")
 
-        # 1D s-step (p_r=1 corner)
-        prob = make_problem(ds.A, ds.y, row_multiple=s * b)
-
-        def ss_run(R, _p=prob, _x0=x0):
-            sched = ParallelSGDSchedule.sstep(
-                s, b, ETA, R * tau, loss_every=tau, gram="dense"
-            )
-            return run_parallel_sgd(single_team(_p), _x0, sched)[1]
-
-        t_s, r_s, l_s = _time_to_target(ss_run, target)
+        t_s, r_s, l_s = _time_to_target(
+            spec(ParallelSGDSchedule.sstep(s, b, ETA, R * tau, loss_every=tau,
+                                           gram="dense"),
+                 name="sstep1d"),
+            target)
         emit(f"table11/{ds_name}/sstep1d", t_s * 1e6, f"rounds={r_s};loss={l_s:.4f}")
 
         speedup = t_f / max(t_h, 1e-9)

@@ -1,35 +1,37 @@
-"""Quickstart: the unified (p_r, p_c, s, τ) engine on a synthetic
-column-skewed dataset.
+"""Quickstart: the declarative front door (spec → plan → run → report)
+on a synthetic column-skewed dataset.
 
-Runs the paper's four algorithms as corners of one schedule family,
-shows the corner identities, and uses the cost model + topology rule
-to pick a mesh for a production machine.
+One ``ExperimentSpec`` describes a run of the (p_r, p_c, s, τ) family;
+``repro.api.plan`` prices it with the paper's cost model (Eq. 4) and
+``repro.api.run`` executes it on the declared backend. The paper's four
+algorithms are just four schedules — the corner identities fall out.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import (
-    ParallelSGDSchedule,
-    full_loss,
-    global_problem,
-    make_problem,
-    run_parallel_sgd,
-    single_team,
-    stack_row_teams,
-)
+from repro.api import ExperimentSpec, MeshSpec, plan, run
+from repro.core import ParallelSGDSchedule
 from repro.costmodel import PERLMUTTER, TPU_V5E, grid_search_config, topology_rule
 from repro.sparse.partition import PARTITIONERS, partition_columns, partition_stats
 from repro.sparse.synthetic import make_dataset
 
 ETA, B, S, TAU = 0.05, 8, 4, 16
+DATASET = "rcv1-sm"
+RM = S * B  # one row padding for every corner → identical sample sequences
+
+
+def corner(schedule, p_r=1, name=""):
+    return ExperimentSpec(
+        dataset=DATASET, schedule=schedule, mesh=MeshSpec(p_r=p_r),
+        row_multiple=RM, name=name,
+    )
 
 
 def main() -> None:
-    ds = make_dataset("rcv1-sm", seed=0)
-    a, y = ds.A, ds.y
+    ds = make_dataset(DATASET, seed=0)
+    a = ds.A
     print(f"dataset {ds.name}: m={a.m} n={a.n} z̄={a.zbar:.0f}")
 
     # --- partitioner stats (the two-objective problem, paper §6.5) ---
@@ -37,25 +39,33 @@ def main() -> None:
         st = partition_stats(a, partition_columns(a, 8, kind))
         print(f"  partitioner {kind:7s}: κ={st.kappa:5.2f}  max n_local={st.max_n_local}")
 
-    # --- one engine, four corners of the (p_r, s, τ) family ---
-    prob = make_problem(a, y, row_multiple=S * B * 4)
-    one = single_team(prob)
-    x0 = jnp.zeros(a.n)
-    f0 = float(full_loss(prob, x0))
+    # --- one front door, four corners of the (p_r, s, τ) family ---
+    specs = {
+        "MB-SGD": corner(ParallelSGDSchedule.mb_sgd(B, ETA, 256), name="mb-sgd"),
+        "s-step SGD": corner(ParallelSGDSchedule.sstep(S, B, ETA, 256), name="sstep"),
+        "FedAvg (p=4)": corner(
+            ParallelSGDSchedule.fedavg(4, B, ETA, TAU, rounds=4), p_r=4, name="fedavg"),
+        "HybridSGD (4×·)": corner(
+            ParallelSGDSchedule.hybrid(4, S, B, ETA, TAU, rounds=4), p_r=4, name="hybrid"),
+    }
+    reports = {label: run(spec) for label, spec in specs.items()}
 
-    x_sgd, _ = run_parallel_sgd(one, x0, ParallelSGDSchedule.mb_sgd(B, ETA, 256))
-    x_ss, _ = run_parallel_sgd(one, x0, ParallelSGDSchedule.sstep(S, B, ETA, 256))
-    tp = stack_row_teams(a, y, 4, row_multiple=S * B)
-    x_fa, _ = run_parallel_sgd(tp, x0, ParallelSGDSchedule.fedavg(4, B, ETA, TAU, rounds=4))
-    x_hy, _ = run_parallel_sgd(tp, x0, ParallelSGDSchedule.hybrid(4, S, B, ETA, TAU, rounds=4))
-    gp = global_problem(tp)
-    print(f"\n  loss(x0)        = {f0:.4f}")
-    print(f"  MB-SGD          → {float(full_loss(prob, x_sgd)):.4f}   (p_r=1, s=1, τ=1)")
-    print(f"  s-step SGD      → {float(full_loss(prob, x_ss)):.4f}   "
-          f"(p_r=1, τ=s; ‖x_sgd−x_ss‖∞ = {float(jnp.abs(x_sgd - x_ss).max()):.2e} "
-          f"— same algorithm!)")
-    print(f"  FedAvg (p=4)    → {float(full_loss(gp, x_fa)):.4f}   (s=1 — no Gram work)")
-    print(f"  HybridSGD (4×·) → {float(full_loss(gp, x_hy)):.4f}   (general 2D point)")
+    gap = float(np.abs(reports["MB-SGD"].x - reports["s-step SGD"].x).max())
+    print()
+    notes = {
+        "MB-SGD": "(p_r=1, s=1, τ=1)",
+        "s-step SGD": f"(p_r=1, τ=s; ‖x_sgd−x_ss‖∞ = {gap:.2e} — same algorithm!)",
+        "FedAvg (p=4)": "(s=1 — no Gram work)",
+        "HybridSGD (4×·)": "(general 2D point)",
+    }
+    for label, rep in reports.items():
+        print(f"  {label:15s} → {rep.final_loss:.4f}   {notes[label]}")
+
+    # --- spec → plan: the cost model prices the run before it exists ---
+    pl = plan(specs["HybridSGD (4×·)"])
+    print(f"\n  plan({pl.spec.name}): predicted {pl.cost.total:.3g} s/epoch "
+          f"(dominant: {pl.regime}); the same spec runs under shard_map by "
+          f'setting mesh=MeshSpec(4, p_c, backend="shard_map")')
 
     # --- mesh + config selection (paper Eq. 7 + Eq. 4) ---
     for machine in (PERLMUTTER, TPU_V5E):

@@ -1,33 +1,31 @@
 """End-to-end driver (the paper's kind: convex training to target loss).
 
 Trains logistic regression on a synthetic url-like (sparse, high-dim,
-column-skewed) dataset with all four solvers, measuring time-to-target
-and reporting the cost model's cluster-level prediction alongside.
+column-skewed) dataset with all four solvers — each one an
+``ExperimentSpec`` through the repro.api front door — measuring
+time-to-target and reporting the cost model's cluster-level prediction
+alongside.
 
     PYTHONPATH=src python examples/train_logreg_hybrid.py [--dataset url-sm]
 """
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import (
-    full_loss,
-    global_problem,
-    make_problem,
-    run_fedavg,
-    run_hybrid_sgd,
-    run_sgd,
-    run_sstep_sgd,
-    stack_row_teams,
-)
+from repro.api import ExperimentSpec, MeshSpec, run
+from repro.core import ParallelSGDSchedule
 from repro.costmodel import PERLMUTTER, grid_search_config, topology_rule
 from repro.sparse.synthetic import make_dataset
 
 ETA = 1.0
+
+
+def to_target(results, name, spec, target):
+    """Run the spec once (per-round loss trace, single compile); the
+    crossing arithmetic lives on RunReport.time_to_target."""
+    t, r, loss, hit = run(spec).time_to_target(target)
+    results[name] = (t, r, loss)
+    ok = "hit " if hit else "MISS"
+    print(f"  {name:12s}: {ok} target in {t:6.2f}s ({r} rounds, loss {loss:.4f})")
 
 
 def main() -> None:
@@ -38,7 +36,7 @@ def main() -> None:
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset, seed=0)
-    a, y = ds.A, ds.y
+    a = ds.A
     print(f"dataset {ds.name}: m={a.m} n={a.n} z̄={a.zbar:.0f} target={args.target}")
 
     # model-driven configuration (the paper's §6 selection flow)
@@ -50,40 +48,32 @@ def main() -> None:
     s, b, tau = 4, 16, 16  # scaled for the -sm dataset
     p_r_run = min(p_r, 4) if p_r > 1 else 2
 
-    x0 = jnp.zeros(a.n)
     results = {}
     R = args.max_rounds
-
-    def to_target(name, run_traced):
-        """One timed run with a per-round loss trace (single compile)."""
-        t0 = time.perf_counter()
-        losses = np.asarray(run_traced(R))
-        total = time.perf_counter() - t0
-        hit = np.nonzero(losses <= args.target)[0]
-        if len(hit):
-            r = int(hit[0]) + 1
-            results[name] = (total * r / R, r, float(losses[hit[0]]))
-            ok = "hit "
-        else:
-            results[name] = (total, R, float(losses[-1]))
-            ok = "MISS"
-        t, r, l = results[name]
-        print(f"  {name:12s}: {ok} target in {t:6.2f}s ({r} rounds, loss {l:.4f})")
 
     # CPU wall-clock comparison → dense-oracle bundle backend: url's ELL
     # width ≫ s·b, so the scatter-free expansion is MXU work that
     # interpret mode serializes off-TPU (kernel timings: bench_kernels).
-    prob = make_problem(a, y, row_multiple=s * b)
-    to_target("sgd", lambda r: run_sgd(prob, x0, b, ETA, r * tau, loss_every=tau)[1])
-    to_target("sstep-1d", lambda r: run_sstep_sgd(prob, x0, s, b, ETA, r * tau,
-                                                  loss_every=tau, gram="dense")[1])
+    def spec(schedule, p_r_=1, name=""):
+        return ExperimentSpec(dataset=args.dataset, schedule=schedule,
+                              mesh=MeshSpec(p_r=p_r_), row_multiple=s * b, name=name)
 
-    tp_f = stack_row_teams(a, y, 8, row_multiple=b)
-    to_target("fedavg(p=8)", lambda r: run_fedavg(tp_f, x0, b, ETA, tau, rounds=r, loss_every=1)[1])
-
-    tp_h = stack_row_teams(a, y, p_r_run, row_multiple=s * b)
-    to_target(f"hybrid({p_r_run}x.)", lambda r: run_hybrid_sgd(tp_h, x0, s, b, ETA, tau, rounds=r,
-                                                               loss_every=1, gram="dense")[1])
+    to_target(results, "sgd",
+              spec(ParallelSGDSchedule.mb_sgd(b, ETA, R * tau, loss_every=tau)),
+              args.target)
+    to_target(results, "sstep-1d",
+              spec(ParallelSGDSchedule.sstep(s, b, ETA, R * tau, loss_every=tau,
+                                             gram="dense")),
+              args.target)
+    to_target(results, "fedavg(p=8)",
+              spec(ParallelSGDSchedule.fedavg(8, b, ETA, tau, rounds=R, loss_every=1),
+                   p_r_=8),
+              args.target)
+    to_target(results, f"hybrid({p_r_run}x.)",
+              spec(ParallelSGDSchedule.hybrid(p_r_run, s, b, ETA, tau, rounds=R,
+                                              loss_every=1, gram="dense"),
+                   p_r_=p_r_run),
+              args.target)
 
     t_fed = results["fedavg(p=8)"][0]
     t_hyb = results[f"hybrid({p_r_run}x.)"][0]

@@ -1,0 +1,32 @@
+"""repro.api — one front door for the whole (p_r, p_c, s, τ) family.
+
+    spec  = ExperimentSpec(dataset="rcv1-sm",
+                           schedule=ParallelSGDSchedule.hybrid(...),
+                           mesh=MeshSpec(p_r=4, p_c=2, backend="simulated"))
+    plan  = repro.api.plan(spec)     # Eq. 4 cost + regime (+ Eq. 5–6 autotune)
+    report = repro.api.run(spec)     # build → dispatch → RunReport
+
+The same spec runs on either backend ("simulated" engine oracle or the
+"shard_map" 2D device mesh) and returns the same ``RunReport``; specs
+JSON round-trip for reproducible configs (``python -m
+repro.launch.sweep --spec spec.json``). See docs/api.md.
+"""
+
+from repro.api.spec import BACKENDS, ExperimentSpec, MeshSpec, dataset_stats
+from repro.api.plan import Plan, plan
+from repro.api.report import RunReport, modeled_comm_words
+from repro.api.run import ProblemBundle, build_problem, run
+
+__all__ = [
+    "BACKENDS",
+    "ExperimentSpec",
+    "MeshSpec",
+    "dataset_stats",
+    "Plan",
+    "plan",
+    "RunReport",
+    "modeled_comm_words",
+    "ProblemBundle",
+    "build_problem",
+    "run",
+]

@@ -1,0 +1,95 @@
+"""plan(spec) — the cost-model stage of the front door.
+
+Runs the paper's closed-form α-β-γ machinery (Eq. 4 via
+``repro.costmodel.hockney.hybrid_epoch_cost``; regime classification
+per Table 5) on the spec's registered dataset statistics, and — when
+``spec.autotune`` — rewrites the schedule's (s, b) to the Eq. 5–6
+optima before anything is built or run. ``run`` calls ``plan`` first,
+so every run carries its predicted cost breakdown in the report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.costmodel.hockney import CostBreakdown, HybridConfig, hybrid_epoch_cost
+from repro.costmodel.machines import MACHINES, Machine
+from repro.costmodel.optimum import classify_regime, joint_sb_star
+from repro.api.spec import ExperimentSpec, dataset_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """The planned experiment: the (possibly retuned) spec plus the
+    model's predictions for it.
+
+    spec      the spec that ``run`` will execute — if autotune rewrote
+              (s, b), this is the rewritten spec (``autotuned`` True).
+    cost      Eq. 4 per-epoch CostBreakdown at the spec's operating
+              point on ``spec.machine``.
+    regime    dominant cost term (Table 5): compute | latency |
+              gram_bw | sync_bw.
+    balance   bandwidth-balance ratio (s-1)·s·b²·τ·p_c / 2n.
+    s_star, b_star   raw Eq. 5–6 optima (before integer snapping);
+              None when autotune is off.
+    """
+
+    spec: ExperimentSpec
+    cost: CostBreakdown
+    regime: str
+    balance: float
+    autotuned: bool = False
+    s_star: float | None = None
+    b_star: float | None = None
+
+    def summary(self) -> str:
+        sched, mesh = self.spec.schedule, self.spec.mesh
+        tag = f" [autotuned s*={self.s_star:.2f} b*={self.b_star:.2f}]" if self.autotuned else ""
+        return (
+            f"{self.spec.name or self.spec.dataset}: mesh {mesh.p_r}×{mesh.p_c} "
+            f"({mesh.backend}), s={sched.s} b={sched.b} τ={sched.tau} → predicted "
+            f"{self.cost.total:.3g} s/epoch on {self.spec.machine} "
+            f"(dominant: {self.regime}, balance {self.balance:.2f}){tag}"
+        )
+
+
+def _autotune_schedule(spec: ExperimentSpec, machine: Machine) -> tuple[ExperimentSpec, float, float]:
+    """Rewrite (s, b) to the Eq. 5–6 joint optimum, snapped to a valid
+    schedule (s ≥ 1, s | τ, b ≥ 1)."""
+    sched, mesh = spec.schedule, spec.mesh
+    st = dataset_stats(spec.dataset)
+    s_raw, b_raw = joint_sb_star(
+        sched.tau, mesh.p_r, mesh.p_c, st.n, machine, s0=sched.s, b0=sched.b
+    )
+    s_new = sched.s if not math.isfinite(s_raw) else max(1, min(int(round(s_raw)), sched.tau))
+    while sched.tau % s_new:  # snap down to a divisor of τ (s | τ)
+        s_new -= 1
+    b_new = sched.b if not math.isfinite(b_raw) else max(1, int(round(b_raw)))
+    new_sched = dataclasses.replace(sched, s=s_new, b=b_new)
+    return dataclasses.replace(spec, schedule=new_sched), s_raw, b_raw
+
+
+def plan(spec: ExperimentSpec) -> Plan:
+    """Cost-model the spec (and auto-tune it when asked). Pure planning:
+    nothing is built, placed, or run — safe as a CI dry-run."""
+    machine = MACHINES[spec.machine]
+    s_raw = b_raw = None
+    autotuned = False
+    if spec.autotune:
+        spec, s_raw, b_raw = _autotune_schedule(spec, machine)
+        autotuned = True
+    st = dataset_stats(spec.dataset)
+    sched, mesh = spec.schedule, spec.mesh
+    cfg = HybridConfig(p_r=mesh.p_r, p_c=mesh.p_c, s=sched.s, b=sched.b, tau=sched.tau)
+    cost = hybrid_epoch_cost(st.m, st.n, st.zbar, cfg, machine)
+    regime = classify_regime(st.m, st.n, st.zbar, cfg, machine)
+    return Plan(
+        spec=spec,
+        cost=cost,
+        regime=regime.name,
+        balance=regime.balance,
+        autotuned=autotuned,
+        s_star=s_raw,
+        b_star=b_raw,
+    )

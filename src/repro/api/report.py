@@ -1,0 +1,94 @@
+"""RunReport — the unified result object every backend returns.
+
+One report shape regardless of how the spec executed (simulated engine
+or shard_map device mesh): final weights, loss trace with the engine's
+``loss_every`` semantics, measured solver wall time, the plan's
+predicted cost breakdown, and the modeled communication volume of the
+run (Table 3 payloads × the schedule's round structure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.api.plan import Plan
+from repro.api.spec import ExperimentSpec
+
+
+def modeled_comm_words(spec: ExperimentSpec) -> dict[str, float]:
+    """Per-rank communicated words implied by the schedule (Table 3):
+    one (s²b² + sb)-word row-team Allreduce per bundle when columns are
+    sharded, one ~n/p_c-word column Allreduce per round when there is
+    more than one row team."""
+    from repro.api.spec import dataset_stats
+
+    sched, mesh = spec.schedule, spec.mesh
+    st_n = dataset_stats(spec.dataset).n
+    bundles = sched.rounds * (sched.tau // sched.s)
+    sb = sched.s * sched.b
+    gram = float(bundles * (sb * sb + sb)) if mesh.p_c > 1 else 0.0
+    sync = float(sched.rounds * math.ceil(st_n / mesh.p_c)) if mesh.p_r > 1 else 0.0
+    return {"gram_words": gram, "sync_words": sync, "total_words": gram + sync}
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What ``run(spec)`` returns, for any backend."""
+
+    spec: ExperimentSpec          # the spec as executed (post-autotune)
+    plan: Plan                    # predicted cost at that operating point
+    backend: str                  # which executor ran it
+    x: np.ndarray                 # final weights (n,)
+    losses: np.ndarray            # full objective every loss_every rounds
+    final_loss: float             # full objective at the final iterate
+    wall_time_s: float            # measured solver wall (excl. build)
+    comm_words: dict[str, float]  # modeled per-rank comm volume
+
+    def time_to_target(self, target: float) -> tuple[float, int, float, bool]:
+        """(seconds, rounds, loss, hit) to reach ``target`` on this
+        run's per-round loss trace: the wall time scaled by the first
+        crossing round (the paper's §7.5 protocol). When the trace never
+        crosses, returns the full wall/rounds/final loss with hit=False."""
+        losses = np.asarray(self.losses)
+        if not len(losses):
+            raise ValueError("time_to_target needs a loss trace (schedule loss_every > 0)")
+        rounds = len(losses)
+        hit = np.nonzero(losses <= target)[0]
+        if len(hit):
+            r = int(hit[0]) + 1
+            return self.wall_time_s * r / rounds, r, float(losses[hit[0]]), True
+        return self.wall_time_s, rounds, float(losses[-1]), False
+
+    def summary(self) -> str:
+        sched = self.spec.schedule
+        trace = f", trace[{len(self.losses)}]" if len(self.losses) else ""
+        return (
+            f"{self.spec.name or self.spec.dataset} [{self.backend}] "
+            f"s={sched.s} b={sched.b} τ={sched.tau} p_r×p_c="
+            f"{self.spec.mesh.p_r}×{self.spec.mesh.p_c}: loss {self.final_loss:.4f} "
+            f"in {self.wall_time_s:.2f}s{trace}; modeled comm "
+            f"{self.comm_words['total_words']:.3g} words/rank"
+        )
+
+    def to_dict(self) -> dict:
+        """JSON-serializable record (weights elided — they belong in a
+        checkpoint, not a report)."""
+        return {
+            "spec": self.spec.to_dict(),
+            "backend": self.backend,
+            "final_loss": self.final_loss,
+            "wall_time_s": self.wall_time_s,
+            "losses": [float(v) for v in np.asarray(self.losses)],
+            "comm_words": self.comm_words,
+            "predicted": {
+                "compute": self.plan.cost.compute,
+                "latency": self.plan.cost.latency,
+                "gram_bw": self.plan.cost.gram_bw,
+                "sync_bw": self.plan.cost.sync_bw,
+                "total": self.plan.cost.total,
+                "regime": self.plan.regime,
+            },
+        }

@@ -1,0 +1,152 @@
+"""The declarative experiment spec — the front door's input language.
+
+An ``ExperimentSpec`` is everything needed to reproduce one run of the
+(p_r, p_c, s, τ) family: the dataset (by registered name + seed), the
+``ParallelSGDSchedule`` (the same knob object the engine executes), the
+``MeshSpec`` (geometry + which execution backend realizes it), and the
+``Machine`` (by name) the cost model plans against.
+
+Specs JSON round-trip (``to_dict``/``from_dict``/``to_json``/
+``from_json``) so a run is reproducible from a config file:
+
+    spec = ExperimentSpec.from_json(Path("spec.json").read_text())
+    report = repro.api.run(spec)
+
+Geometry lives in one place: ``MeshSpec`` is authoritative for
+(p_r, p_c). The schedule's ``p_r`` must agree (it is a numerical knob —
+row teams change the iterates); the schedule's ``p_c`` is
+communication-only and is canonicalized from the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core.engine import ParallelSGDSchedule
+from repro.costmodel.machines import MACHINES
+from repro.sparse.partition import PARTITIONERS
+from repro.sparse.synthetic import dataset_stats
+
+BACKENDS = ("simulated", "shard_map")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Where the computation runs.
+
+    p_r × p_c   the paper's 2D processor mesh (row teams × column
+                shards).
+    backend     "simulated" — exact rank semantics on one device via
+                the unified engine (repro.core.engine); "shard_map" —
+                real device mesh execution (repro.core.distributed;
+                needs p_r·p_c addressable devices).
+    partitioner column partitioner for the shard_map layout (§6.5);
+                ignored by the simulated backend (p_c is
+                communication-only and never changes the numerics).
+    """
+
+    p_r: int = 1
+    p_c: int = 1
+    backend: str = "simulated"
+    partitioner: str = "cyclic"
+
+    def __post_init__(self):
+        if self.p_r < 1 or self.p_c < 1:
+            raise ValueError(f"mesh must be ≥ 1×1, got {self.p_r}×{self.p_c}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend={self.backend!r} not in {BACKENDS}")
+        if self.partitioner not in PARTITIONERS:
+            raise ValueError(
+                f"partitioner={self.partitioner!r} not in {tuple(PARTITIONERS)}"
+            )
+
+    @property
+    def p(self) -> int:
+        return self.p_r * self.p_c
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MeshSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One declarative experiment: spec → plan → run → report.
+
+    dataset      registered dataset name (repro.sparse.synthetic); the
+                 -sm variants materialize on one host.
+    schedule     the (s, b, τ, η, rounds, loss_every, gram) knobs —
+                 the exact object both backends execute.
+    mesh         geometry + backend (authoritative for p_r, p_c).
+    machine      cost-model machine name (repro.costmodel.MACHINES)
+                 used by ``plan``.
+    seed         dataset generation seed.
+    autotune     let ``plan`` rewrite (s, b) via the closed-form optima
+                 (Eq. 5–6) before running.
+    row_multiple rows are padded to this multiple (None → s·b, the
+                 paper's cyclic-sampling requirement). Pin it when
+                 comparing schedules with different s·b so they see the
+                 identical sample sequence.
+    name         optional label for reports/sweeps.
+    """
+
+    dataset: str
+    schedule: ParallelSGDSchedule
+    mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
+    machine: str = "perlmutter-cpu"
+    seed: int = 0
+    autotune: bool = False
+    row_multiple: int | None = None
+    name: str = ""
+
+    def __post_init__(self):
+        dataset_stats(self.dataset)  # raises on unknown name
+        if self.machine not in MACHINES:
+            raise ValueError(f"machine={self.machine!r} not in {sorted(MACHINES)}")
+        if self.schedule.p_r != self.mesh.p_r:
+            raise ValueError(
+                f"schedule.p_r={self.schedule.p_r} != mesh.p_r={self.mesh.p_r}: row "
+                f"teams are a numerical knob and must agree"
+            )
+        if self.schedule.p_c not in (1, self.mesh.p_c):
+            raise ValueError(
+                f"schedule.p_c={self.schedule.p_c} != mesh.p_c={self.mesh.p_c}"
+            )
+        if self.schedule.p_c != self.mesh.p_c:
+            # p_c is communication-only: canonicalize from the mesh so
+            # one object describes the full run.
+            object.__setattr__(
+                self, "schedule", dataclasses.replace(self.schedule, p_c=self.mesh.p_c)
+            )
+
+    # ---- JSON round-tripping ----
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "dataset": self.dataset,
+            "seed": self.seed,
+            "machine": self.machine,
+            "autotune": self.autotune,
+            "row_multiple": self.row_multiple,
+            "schedule": dataclasses.asdict(self.schedule),
+            "mesh": self.mesh.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        schedule = ParallelSGDSchedule(**d.pop("schedule"))
+        mesh = MeshSpec.from_dict(d.pop("mesh", {}))
+        return cls(schedule=schedule, mesh=mesh, **d)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))

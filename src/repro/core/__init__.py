@@ -16,10 +16,16 @@ Configured corners, kept as thin wrappers for compatibility:
   run_fedavg           Algorithm 2 — FedAvg / local SGD
   run_hybrid_sgd       HybridSGD, exact simulated-rank semantics
   run_hybrid_distributed  HybridSGD under shard_map on a 2D device mesh
-                          (shares the engine's bundle primitive)
+                          (consumes the same ParallelSGDSchedule and
+                          shares the engine's bundle primitive)
 
 Corner identities (tested): hybrid(p_r=1) ≡ s-step; hybrid(p_r=p, s=1)
 ≡ FedAvg; s-step(s=1) ≡ SGD; fedavg(τ=1) ≡ synchronous MB-SGD.
+
+Experiment-level code should normally enter through the declarative
+front door instead: repro.api (ExperimentSpec → plan → run → RunReport)
+plans a spec with the cost model and dispatches it to either the
+simulated engine or the shard_map executor.
 """
 
 from repro.core.problem import LogisticProblem, full_loss, make_problem, sigmoid_residual

@@ -15,6 +15,11 @@ Per s-bundle (the paper's row-team Allreduce):
 Per τ inner iterations (the paper's column Allreduce):
   x_local ← pmean over "rows" (n/p_c words per rank).
 
+The execution knobs arrive as one ``ParallelSGDSchedule`` — the same
+object the simulated engine consumes — so the two paths cannot drift on
+plumbing. The legacy loose-scalar signatures (s=..., b=..., ...) are
+kept as deprecated shims.
+
 Numerics match repro.core.engine.run_parallel_sgd exactly (tested in a
 multi-device subprocess); the simulated version is the oracle.
 """
@@ -22,6 +27,7 @@ multi-device subprocess); the simulated version is the oracle.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +35,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.engine import bundle_gram_v, inner_corrections
+from repro.core.engine import ParallelSGDSchedule, bundle_gram_v, inner_corrections
+from repro.core.problem import LogisticProblem, full_loss
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.ell import EllBlock, ell_rmatvec
 from repro.sparse.partition import ColumnPartition, partition_columns, partition_rows
@@ -134,28 +141,93 @@ def gather_x(x_pad: np.ndarray, cp: ColumnPartition, n_loc: int, n: int) -> np.n
     return out
 
 
+def _legacy_schedule(
+    p_r: int, s, b, eta, tau, rounds, gram: str, caller: str
+) -> ParallelSGDSchedule:
+    """Adapt the pre-API loose-scalar knobs into a schedule (deprecated)."""
+    warnings.warn(
+        f"{caller}(s=..., b=..., tau=..., ...) with loose scalars is deprecated; "
+        f"pass a repro.core.ParallelSGDSchedule (or use the repro.api front door)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    if b is None or eta is None or tau is None:
+        raise TypeError(f"legacy {caller} call is missing one of (b, eta, tau)")
+    return ParallelSGDSchedule.hybrid(
+        p_r, int(s), int(b), float(eta), int(tau),
+        rounds=int(rounds) if rounds is not None else 1, gram=gram or "blocked",
+    )
+
+
+def _reject_scalars_with_schedule(caller: str, **scalars) -> None:
+    """A schedule is the whole configuration — a scalar knob alongside
+    it would be silently ignored, so make that a hard error."""
+    extras = [k for k, v in scalars.items() if v is not None]
+    if extras:
+        raise TypeError(
+            f"{caller}: got both a ParallelSGDSchedule and scalar knob(s) "
+            f"{extras} — the schedule carries all knobs; use "
+            f"dataclasses.replace(sched, ...) instead"
+        )
+
+
 def make_hybrid_step(
     mesh: Mesh,
     prob: Hybrid2DProblem,
-    s: int,
-    b: int,
-    tau: int,
-    eta: float,
-    gram: str = "blocked",
-    bk: int = 512,
+    sched: ParallelSGDSchedule | int | None = None,
+    b: int | None = None,
+    tau: int | None = None,
+    eta: float | None = None,
+    gram: str | None = None,
+    bk: int | None = None,
+    *,
+    s: int | None = None,
 ):
     """Return a jitted fn (indices, values, x_pad, round_idx) → x_pad
     executing one HybridSGD round (τ inner s-step iterations + column
     average) under shard_map on ``mesh`` (axes "rows", "cols").
 
-    ``gram`` selects the bundle backend (see engine.GRAM_METHODS);
-    "blocked" is the scatter-free panel-streaming path, safe inside
-    shard_map on every backend."""
-    if tau % s:
-        raise ValueError("tau must be divisible by s")
-    sb = s * b
+    ``sched`` is the same ``ParallelSGDSchedule`` the simulated engine
+    consumes; its ``gram`` selects the bundle backend (a schedule-level
+    "pallas" is executed as "blocked" here — identical math, and the
+    panel-streaming jnp path is safe inside shard_map on every backend).
+
+    The returned step donates ``x_pad`` and pins its output to the
+    ``P("cols")`` sharding of the input, so drivers can chain rounds
+    without re-placing the weights (no per-round sync + copy).
+
+    The legacy signature ``make_hybrid_step(mesh, prob, s, b, tau, eta,
+    gram=..., bk=...)`` still works but emits a DeprecationWarning.
+    """
+    if isinstance(sched, ParallelSGDSchedule):
+        _reject_scalars_with_schedule(
+            "make_hybrid_step", s=s, b=b, tau=tau, eta=eta, gram=gram, bk=bk
+        )
+    else:
+        s_val = sched if sched is not None else s
+        if s_val is None:
+            raise TypeError("make_hybrid_step needs a ParallelSGDSchedule (or legacy s=...)")
+        sched = _legacy_schedule(prob.p_r, s_val, b, eta, tau, None, gram, "make_hybrid_step")
+        if bk is not None:
+            sched = dataclasses.replace(sched, bk=bk)
+    if sched.tau % sched.s:
+        raise ValueError(f"tau={sched.tau} must be divisible by s={sched.s}")
+    if tuple(mesh.axis_names) != ("rows", "cols"):
+        raise ValueError(f'mesh axes must be ("rows", "cols"), got {mesh.axis_names}')
+    if dict(mesh.shape) != {"rows": prob.p_r, "cols": prob.p_c}:
+        raise ValueError(
+            f"mesh {dict(mesh.shape)} does not match problem layout "
+            f"{prob.p_r}×{prob.p_c}"
+        )
+    s, b_, eta_ = sched.s, sched.b, sched.eta
+    sb = s * b_
     n_loc = prob.n_loc
-    bundles = tau // s
+    bundles = sched.tau // s
+    # "pallas" is the simulated engine's default; inside shard_map the
+    # same math runs on the blocked panel-streaming path (shard_map-safe
+    # everywhere, incl. CPU interpret containers).
+    gram_ = "blocked" if sched.gram == "pallas" else sched.gram
+    bk_ = sched.bk
 
     def round_fn(idx_blk, val_blk, x_loc, round_idx):
         # shapes inside shard_map: idx/val (1, 1, rows_local, width),
@@ -171,32 +243,29 @@ def make_hybrid_step(
             bv = jax.lax.dynamic_slice_in_dim(val_blk, start, sb, axis=0)
             # local partial (G, v) via the engine's shared primitive —
             # then the row-team Allreduce (paper Table 3 payload)
-            g_part, v_part = bundle_gram_v(bi, bv, x_loc, n_loc, gram=gram, bk=bk)
+            g_part, v_part = bundle_gram_v(bi, bv, x_loc, n_loc, gram=gram_, bk=bk_)
             g = jax.lax.psum(g_part, "cols")
             v = jax.lax.psum(v_part, "cols")
-            u = inner_corrections(g, v, s, b, eta)
+            u = inner_corrections(g, v, s, b_, eta_)
             # Yᵀu stays local under column partitioning
             blk = EllBlock(indices=bi, values=bv, n=n_loc)
-            return x_loc + (eta / b) * ell_rmatvec(blk, u).astype(x_loc.dtype), None
+            return x_loc + (eta_ / b_) * ell_rmatvec(blk, u).astype(x_loc.dtype), None
 
         x_loc, _ = jax.lax.scan(bundle, x_loc, jnp.arange(bundles))
-        # column Allreduce: FedAvg averaging across row teams (n/p_c words)
-        x_loc = jax.lax.pmean(x_loc, "rows")
-        return x_loc[None, None]  # restore mesh dims for out_specs
+        # column Allreduce: FedAvg averaging across row teams (n/p_c
+        # words) — the result is row-replicated, so the out_spec can
+        # drop the "rows" axis.
+        return jax.lax.pmean(x_loc, "rows")
 
     smapped = shard_map(
         round_fn,
         mesh=mesh,
         in_specs=(P("rows", "cols"), P("rows", "cols"), P("cols"), P()),
-        out_specs=P("rows", "cols"),
+        out_specs=P("cols"),
     )
 
-    @jax.jit
-    def step(idx, val, x_pad, round_idx):
-        out = smapped(idx, val, x_pad, round_idx)
-        # out: (p_r, p_c·n_loc) replicated content along rows — take row 0
-        return out[0].reshape(-1)
-
+    x_sh = NamedSharding(mesh, P("cols"))
+    step = jax.jit(smapped, out_shardings=x_sh, donate_argnums=(2,))
     return step
 
 
@@ -205,21 +274,63 @@ def run_hybrid_distributed(
     prob: Hybrid2DProblem,
     cp: ColumnPartition,
     x0: np.ndarray,
-    s: int,
-    b: int,
-    eta: float,
-    tau: int,
-    rounds: int,
-    gram: str = "blocked",
+    sched: ParallelSGDSchedule | int | None = None,
+    b: int | None = None,
+    eta: float | None = None,
+    tau: int | None = None,
+    rounds: int | None = None,
+    gram: str | None = None,
+    *,
+    s: int | None = None,
+    loss_problem: LogisticProblem | None = None,
 ):
-    """Convenience driver: place data, run ``rounds`` rounds, gather x."""
-    step = make_hybrid_step(mesh, prob, s, b, tau, eta, gram=gram)
+    """Driver: place data once, run ``sched.rounds`` rounds, gather x.
+
+    Returns ``(x, losses)`` — the same contract as the simulated
+    engine's ``run_parallel_sgd``: the full global objective is sampled
+    every ``sched.loss_every`` rounds (empty trace when 0). Sampling
+    the loss needs the global problem, so pass ``loss_problem`` (the
+    repro.api front door wires this automatically).
+
+    The weights stay device-resident between rounds: the jitted step
+    donates ``x_pad`` and returns it already in the ``P("cols")``
+    sharding, so the loop is a chain of async dispatches with no
+    per-round host sync.
+
+    The legacy signature ``run_hybrid_distributed(mesh, prob, cp, x0,
+    s, b, eta, tau, rounds, gram=...)`` still works (returning bare
+    ``x``, its old contract) but emits a DeprecationWarning.
+    """
+    legacy = not isinstance(sched, ParallelSGDSchedule)
+    if legacy:
+        s_val = sched if sched is not None else s
+        if s_val is None:
+            raise TypeError(
+                "run_hybrid_distributed needs a ParallelSGDSchedule (or legacy s=...)"
+            )
+        sched = _legacy_schedule(
+            prob.p_r, s_val, b, eta, tau, rounds, gram, "run_hybrid_distributed"
+        )
+    else:
+        _reject_scalars_with_schedule(
+            "run_hybrid_distributed", s=s, b=b, eta=eta, tau=tau, rounds=rounds, gram=gram
+        )
+    if sched.loss_every and loss_problem is None:
+        raise ValueError("loss_every > 0 needs loss_problem (the global LogisticProblem)")
+
+    step = make_hybrid_step(mesh, prob, sched)
     data_sh = NamedSharding(mesh, P("rows", "cols"))
     x_sh = NamedSharding(mesh, P("cols"))
     idx = jax.device_put(prob.indices, data_sh)
     val = jax.device_put(prob.values, data_sh)
     x_pad = jax.device_put(jnp.asarray(scatter_x(np.asarray(x0), cp, prob.n_loc)), x_sh)
-    for r in range(rounds):
+    losses = []
+    for r in range(sched.rounds):
         x_pad = step(idx, val, x_pad, jnp.int32(r))
-        x_pad = jax.device_put(x_pad, x_sh)
-    return gather_x(np.asarray(x_pad), cp, prob.n_loc, prob.n)
+        if sched.loss_every and (r + 1) % sched.loss_every == 0:
+            xg = gather_x(np.asarray(x_pad), cp, prob.n_loc, prob.n)
+            losses.append(float(full_loss(loss_problem, jnp.asarray(xg))))
+    x = gather_x(np.asarray(x_pad), cp, prob.n_loc, prob.n)
+    if legacy:
+        return x
+    return x, np.asarray(losses, dtype=np.float32)

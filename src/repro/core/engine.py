@@ -104,12 +104,22 @@ class ParallelSGDSchedule:
     @classmethod
     def sstep(cls, s: int, b: int, eta: float, iters: int, loss_every: int = 0, **kw):
         """Algorithm 3: 1D s-step SGD — iters/s bundles, one bundle per
-        round, no averaging (p_r = 1)."""
+        round, no averaging (p_r = 1).
+
+        ``loss_every`` counts SGD-equivalent iterations (like ``iters``)
+        and must be a multiple of s: one round = s iterations, so any
+        other cadence cannot be sampled exactly.
+        """
         if iters % s:
             raise ValueError(f"iters={iters} must be divisible by s={s}")
+        if loss_every and loss_every % s:
+            raise ValueError(
+                f"loss_every={loss_every} must be divisible by s={s}: the loss is "
+                f"sampled on round (= s-iteration) boundaries"
+            )
         return cls(
             p_r=1, s=s, b=b, tau=s, eta=eta, rounds=iters // s,
-            loss_every=max(loss_every // s, 1) if loss_every else 0, **kw,
+            loss_every=loss_every // s, **kw,
         )
 
     @classmethod

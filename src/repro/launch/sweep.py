@@ -1,0 +1,68 @@
+"""Declarative experiment launcher: ``python -m repro.launch.sweep``.
+
+Drives the repro.api front door from JSON spec files — the config-file
+twin of ``repro.launch.train``'s flag-style CLI:
+
+    PYTHONPATH=src python -m repro.launch.sweep --spec spec.json
+    PYTHONPATH=src python -m repro.launch.sweep --spec sweep.json --out results.json
+    PYTHONPATH=src python -m repro.launch.sweep --spec spec.json --plan-only
+
+The spec file holds one ``ExperimentSpec`` dict or a list of them (a
+sweep). Each spec is cost-model planned (Eq. 4 breakdown + regime;
+Eq. 5–6 autotune when the spec asks) and then run on its declared
+backend — ``--plan-only`` stops after planning, which needs no devices
+and no dataset materialization (the CI smoke path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.api import ExperimentSpec, plan, run
+
+
+def load_specs(path: Path) -> list[ExperimentSpec]:
+    """One spec dict or a list of them → ExperimentSpecs (validated)."""
+    raw = json.loads(path.read_text())
+    if isinstance(raw, dict):
+        raw = [raw]
+    if not isinstance(raw, list):
+        raise ValueError(f"{path}: expected a spec object or a list of them")
+    return [ExperimentSpec.from_dict(d) for d in raw]
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.sweep", description="plan/run ExperimentSpecs from JSON"
+    )
+    ap.add_argument("--spec", required=True, type=Path, help="spec JSON (object or list)")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="cost-model only — no build, no devices, no training")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write reports (JSON list) here")
+    args = ap.parse_args(argv)
+
+    specs = load_specs(args.spec)
+    records = []
+    for spec in specs:
+        pl = plan(spec)
+        print(f"[plan ] {pl.summary()}", flush=True)
+        if args.plan_only:
+            records.append({"spec": pl.spec.to_dict(), "predicted_total_s": pl.cost.total,
+                            "regime": pl.regime})
+            continue
+        report = run(spec)
+        print(f"[run  ] {report.summary()}", flush=True)
+        records.append(report.to_dict())
+
+    if args.out:
+        args.out.write_text(json.dumps(records, indent=2))
+        print(f"[done ] {len(records)} record(s) → {args.out}")
+    else:
+        print(f"[done ] {len(records)} spec(s) processed")
+
+
+if __name__ == "__main__":
+    main()

@@ -51,6 +51,16 @@ SM_STATS: dict[str, DatasetStats] = {
 }
 
 
+def dataset_stats(name: str) -> DatasetStats:
+    """Registered statistics for ``name`` — materializable -sm variants
+    first, then the paper's full-size stat entries."""
+    stats = SM_STATS.get(name) or DATASET_STATS.get(name)
+    if stats is None:
+        known = sorted(SM_STATS) + sorted(DATASET_STATS)
+        raise KeyError(f"unknown dataset {name!r}; known: {known}")
+    return stats
+
+
 @dataclasses.dataclass
 class SyntheticDataset:
     name: str
@@ -106,9 +116,7 @@ def make_skewed_csr(
 
 
 def make_dataset(name: str, seed: int = 0) -> SyntheticDataset:
-    stats = SM_STATS.get(name) or DATASET_STATS.get(name)
-    if stats is None:
-        raise KeyError(f"unknown dataset {name!r}; known: {sorted(SM_STATS) + sorted(DATASET_STATS)}")
+    stats = dataset_stats(name)
     a = make_skewed_csr(stats.m, stats.n, stats.zbar, stats.skew_alpha, seed=seed, dense=stats.dense)
     rng = np.random.default_rng(seed + 1)
     # sparse ground truth for a learnable logistic problem

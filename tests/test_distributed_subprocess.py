@@ -89,6 +89,40 @@ def test_distributed_fedavg_corner():
     assert "OK" in out
 
 
+@pytest.mark.parametrize("mesh_shape", [(2, 4), (4, 2)])
+def test_front_door_backend_parity(mesh_shape):
+    """The repro.api acceptance check: run(spec) with backend="simulated"
+    and backend="shard_map" agree — same weights, same loss trace — on
+    the same spec (only the mesh backend field differs)."""
+    p_r, p_c = mesh_shape
+    out = run_in_subprocess(
+        f"""
+        import dataclasses
+        import numpy as np
+        from repro.api import ExperimentSpec, MeshSpec, run
+        from repro.core import ParallelSGDSchedule
+
+        sched = ParallelSGDSchedule.hybrid({p_r}, 2, 4, 0.05, 8, rounds=3, loss_every=1)
+        spec = ExperimentSpec(
+            dataset="rcv1-sm",
+            schedule=sched,
+            mesh=MeshSpec(p_r={p_r}, p_c={p_c}, backend="simulated"),
+            name="parity",
+        )
+        r_sim = run(spec)
+        r_dist = run(dataclasses.replace(
+            spec, mesh=MeshSpec(p_r={p_r}, p_c={p_c}, backend="shard_map")))
+        dx = float(np.abs(r_sim.x - r_dist.x).max())
+        dl = float(np.abs(r_sim.losses - r_dist.losses).max())
+        assert r_sim.losses.shape == (3,), r_sim.losses.shape
+        assert dx < 1e-5, dx
+        assert dl < 1e-5, dl
+        print("OK", dx, dl)
+        """
+    )
+    assert "OK" in out
+
+
 def test_x64_strict_sstep_identity():
     """With float64 the s-step identity holds to ~1e-12 (paper runs
     FP64 for Gram conditioning)."""
