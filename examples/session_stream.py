@@ -1,0 +1,65 @@
+"""Round-streaming lifecycle: step / observe / checkpoint / resume.
+
+The Session opens the solver loop at round granularity — the same
+iterates as ``run(spec)``, bitwise, but control returns after every
+chunk so a driver (dashboard, early-stopper, async averager) can watch
+the loss move, checkpoint, and decide whether to continue:
+
+    PYTHONPATH=src python examples/session_stream.py
+"""
+
+import dataclasses
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.api import ExperimentSpec, MeshSpec, Session, StopPolicy
+from repro.core import ParallelSGDSchedule
+
+
+def main() -> None:
+    sched = ParallelSGDSchedule.hybrid(4, 4, 8, 0.5, 16, rounds=12, loss_every=2)
+    spec = ExperimentSpec(
+        dataset="rcv1-sm",
+        schedule=sched,
+        mesh=MeshSpec(p_r=4),
+        name="stream-demo",
+    )
+
+    # --- stream rounds, watching the objective move ---
+    sess = Session(spec)
+    print(f"streaming {sess.total_rounds} rounds of {spec.name}:")
+    while not sess.done:
+        ev = sess.step_rounds()  # one loss-sampling chunk per call
+        loss = f"{ev.loss:.4f}" if ev.loss is not None else "   —  "
+        print(
+            f"  round {ev.rounds_done:3d}/{sess.total_rounds}  loss {loss}  "
+            f"wall {ev.wall_time_s:6.2f}s  comm {ev.comm_words['total_words']:,.0f} words"
+        )
+
+    # --- interrupt / resume: identical iterates, guaranteed ---
+    with tempfile.TemporaryDirectory() as d:
+        ck = Path(d) / "demo"
+        half = Session(spec)
+        half.step_rounds(sess.total_rounds // 2)
+        half.save(ck)  # keyed by the spec's content hash
+        resumed = Session.restore(ck).run()
+        same = np.array_equal(resumed.x, sess.current_x())
+        print(f"\nsave@{sess.total_rounds // 2} → restore → finish: "
+              f"weights identical to the uninterrupted run: {same}")
+
+    # --- the paper's §7.5 protocol as a first-class stop ---
+    target = float(sess.losses[len(sess.losses) // 2])  # mid-trace: hit early
+    early = Session(dataclasses.replace(spec, stop=StopPolicy(target_loss=target)))
+    rep = early.run()
+    print(
+        f"target_loss={target:.4f} stop: finished at round "
+        f"{rep.rounds_completed}/{sched.rounds} ({rep.stop_reason}), "
+        f"wall {rep.wall_time_s:.2f}s = compile {rep.compile_time_s:.2f}s "
+        f"+ solve {rep.solve_time_s:.2f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

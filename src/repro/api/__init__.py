@@ -4,23 +4,31 @@
                            schedule=ParallelSGDSchedule.hybrid(...),
                            mesh=MeshSpec(p_r=4, p_c=2, backend="simulated"))
     plan  = repro.api.plan(spec)     # Eq. 4 cost + regime (+ Eq. 5–6 autotune)
-    report = repro.api.run(spec)     # build → dispatch → RunReport
+    report = repro.api.run(spec)     # build → session loop → RunReport
 
-The same spec runs on either backend ("simulated" engine oracle or the
-"shard_map" 2D device mesh) and returns the same ``RunReport``; specs
-JSON round-trip for reproducible configs (``python -m
-repro.launch.sweep --spec spec.json``). See docs/api.md.
+The execution lifecycle is round-incremental underneath: ``Session``
+exposes it (step_rounds / save / restore / report), ``run`` is a thin
+loop over it honoring the spec's ``StopPolicy`` (target_loss /
+max_seconds / max_rounds), and ``sweep`` drives many specs with a
+shared dataset cache and interrupt/resume. The same spec runs on either
+backend ("simulated" engine oracle or the "shard_map" 2D device mesh)
+and returns the same ``RunReport``; specs JSON round-trip for
+reproducible configs (``python -m repro.launch.sweep --spec
+spec.json``). See docs/api.md.
 """
 
-from repro.api.spec import BACKENDS, ExperimentSpec, MeshSpec, dataset_stats
+from repro.api.spec import BACKENDS, ExperimentSpec, MeshSpec, StopPolicy, dataset_stats
 from repro.api.plan import Plan, plan
 from repro.api.report import RunReport, modeled_comm_words
 from repro.api.run import ProblemBundle, build_problem, run
+from repro.api.session import RoundEvent, Session
+from repro.api.sweep import SweepReport, sweep
 
 __all__ = [
     "BACKENDS",
     "ExperimentSpec",
     "MeshSpec",
+    "StopPolicy",
     "dataset_stats",
     "Plan",
     "plan",
@@ -29,4 +37,8 @@ __all__ = [
     "ProblemBundle",
     "build_problem",
     "run",
+    "RoundEvent",
+    "Session",
+    "SweepReport",
+    "sweep",
 ]

@@ -10,6 +10,7 @@ run (Table 3 payloads × the schedule's round structure).
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 
 import numpy as np
@@ -18,34 +19,50 @@ from repro.api.plan import Plan
 from repro.api.spec import ExperimentSpec
 
 
-def modeled_comm_words(spec: ExperimentSpec) -> dict[str, float]:
+def modeled_comm_words(spec: ExperimentSpec, rounds: int | None = None) -> dict[str, float]:
     """Per-rank communicated words implied by the schedule (Table 3):
     one (s²b² + sb)-word row-team Allreduce per bundle when columns are
     sharded, one ~n/p_c-word column Allreduce per round when there is
-    more than one row team."""
+    more than one row team.
+
+    ``rounds`` overrides the schedule's round budget — the Session uses
+    it to report the volume of the rounds actually completed (early
+    stop, mid-run events)."""
     from repro.api.spec import dataset_stats
 
     sched, mesh = spec.schedule, spec.mesh
     st_n = dataset_stats(spec.dataset).n
-    bundles = sched.rounds * (sched.tau // sched.s)
+    r = sched.rounds if rounds is None else int(rounds)
+    bundles = r * (sched.tau // sched.s)
     sb = sched.s * sched.b
     gram = float(bundles * (sb * sb + sb)) if mesh.p_c > 1 else 0.0
-    sync = float(sched.rounds * math.ceil(st_n / mesh.p_c)) if mesh.p_r > 1 else 0.0
+    sync = float(r * math.ceil(st_n / mesh.p_c)) if mesh.p_r > 1 else 0.0
     return {"gram_words": gram, "sync_words": sync, "total_words": gram + sync}
 
 
 @dataclasses.dataclass
 class RunReport:
-    """What ``run(spec)`` returns, for any backend."""
+    """What ``run(spec)`` returns, for any backend.
+
+    ``wall_time_s`` splits as ``compile_time_s + solve_time_s``:
+    the first session chunk (jit compile + one chunk of rounds) versus
+    the steady-state remainder — compare solve times across specs
+    without the one-off compilation noise.
+    """
 
     spec: ExperimentSpec          # the spec as executed (post-autotune)
     plan: Plan                    # predicted cost at that operating point
     backend: str                  # which executor ran it
-    x: np.ndarray                 # final weights (n,)
+    x: np.ndarray | None          # final weights (n,); None when the
+                                  # report was rehydrated from JSON
     losses: np.ndarray            # full objective every loss_every rounds
     final_loss: float             # full objective at the final iterate
     wall_time_s: float            # measured solver wall (excl. build)
     comm_words: dict[str, float]  # modeled per-rank comm volume
+    compile_time_s: float = 0.0   # first chunk (includes jit compile)
+    solve_time_s: float = 0.0     # steady state (wall − first chunk)
+    rounds_completed: int | None = None  # rounds actually run (None: full budget)
+    stop_reason: str | None = None  # StopPolicy verdict ("rounds" = budget)
 
     def time_to_target(self, target: float) -> tuple[float, int, float, bool]:
         """(seconds, rounds, loss, hit) to reach ``target`` on this
@@ -65,22 +82,31 @@ class RunReport:
     def summary(self) -> str:
         sched = self.spec.schedule
         trace = f", trace[{len(self.losses)}]" if len(self.losses) else ""
+        stopped = (
+            f" (stopped: {self.stop_reason} @ round {self.rounds_completed})"
+            if self.stop_reason not in (None, "rounds")
+            else ""
+        )
         return (
             f"{self.spec.name or self.spec.dataset} [{self.backend}] "
             f"s={sched.s} b={sched.b} τ={sched.tau} p_r×p_c="
             f"{self.spec.mesh.p_r}×{self.spec.mesh.p_c}: loss {self.final_loss:.4f} "
-            f"in {self.wall_time_s:.2f}s{trace}; modeled comm "
+            f"in {self.wall_time_s:.2f}s{trace}{stopped}; modeled comm "
             f"{self.comm_words['total_words']:.3g} words/rank"
         )
 
     def to_dict(self) -> dict:
         """JSON-serializable record (weights elided — they belong in a
-        checkpoint, not a report)."""
+        checkpoint, not a report). Round-trips through ``from_dict``."""
         return {
             "spec": self.spec.to_dict(),
             "backend": self.backend,
             "final_loss": self.final_loss,
             "wall_time_s": self.wall_time_s,
+            "compile_time_s": self.compile_time_s,
+            "solve_time_s": self.solve_time_s,
+            "rounds_completed": self.rounds_completed,
+            "stop_reason": self.stop_reason,
             "losses": [float(v) for v in np.asarray(self.losses)],
             "comm_words": self.comm_words,
             "predicted": {
@@ -92,3 +118,33 @@ class RunReport:
                 "regime": self.plan.regime,
             },
         }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunReport":
+        """Rehydrate a persisted report (sweep resume). The plan is
+        recomputed from the spec (pure and deterministic); the weights
+        are not stored in reports, so ``x`` is None."""
+        from repro.api.plan import plan as plan_fn
+
+        spec = ExperimentSpec.from_dict(d["spec"])
+        return cls(
+            spec=spec,
+            plan=plan_fn(spec),
+            backend=d["backend"],
+            x=None,
+            losses=np.asarray(d["losses"], np.float32),
+            final_loss=float(d["final_loss"]),
+            wall_time_s=float(d["wall_time_s"]),
+            comm_words=dict(d["comm_words"]),
+            compile_time_s=float(d.get("compile_time_s", 0.0)),
+            solve_time_s=float(d.get("solve_time_s", 0.0)),
+            rounds_completed=d.get("rounds_completed"),
+            stop_reason=d.get("stop_reason"),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunReport":
+        return cls.from_dict(json.loads(text))

@@ -1,46 +1,41 @@
-"""run(spec) — build once, dispatch to a backend, report uniformly.
+"""run(spec) — build once, execute through a Session, report uniformly.
 
 ``build_problem`` subsumes the three hand-rolled construction paths the
 launchers used to carry (``single_team`` / ``stack_row_teams`` /
-``build_2d_problem``) behind one call keyed off the spec; ``run`` then
+``build_2d_problem``) behind one call keyed off the spec; ``run`` is a
+thin loop over the round-incremental ``repro.api.Session``, which
 dispatches the same ``ParallelSGDSchedule`` to either executor:
 
-  backend="simulated"  repro.core.engine.run_parallel_sgd — exact
+  backend="simulated"  repro.core.engine.run_engine_chunk — exact
                        simulated-rank semantics on one device (the
                        oracle; p_c is communication-only there).
-  backend="shard_map"  repro.core.distributed.run_hybrid_distributed —
+  backend="shard_map"  repro.core.distributed.HybridDriver —
                        the production 2D device-mesh execution (needs
                        p_r·p_c addressable devices, e.g. via
                        XLA_FLAGS=--xla_force_host_platform_device_count).
 
 Both return the same ``RunReport`` (weights, loss trace with engine
-``loss_every`` semantics, wall time, modeled comm volume), so switching
-hardware is a one-field change in the spec — tested for parity in
-tests/test_distributed_subprocess.py.
+``loss_every`` semantics, wall time split into compile/solve, modeled
+comm volume), so switching hardware is a one-field change in the spec —
+tested for parity in tests/test_distributed_subprocess.py. Chunked
+session execution is bitwise-identical to the monolithic single-scan
+engine path (tests/test_session.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.api.plan import Plan, plan
-from repro.api.report import RunReport, modeled_comm_words
+from repro.api.report import RunReport
 from repro.api.spec import ExperimentSpec
-from repro.core.distributed import (
-    Hybrid2DProblem,
-    build_2d_problem,
-    run_hybrid_distributed,
-)
+from repro.core.distributed import Hybrid2DProblem, build_2d_problem
 from repro.sparse.partition import ColumnPartition
-from repro.core.engine import run_parallel_sgd
-from repro.core.problem import LogisticProblem, full_loss, make_problem
+from repro.core.problem import LogisticProblem, make_problem
 from repro.core.teams import TeamProblem, stack_row_teams
 from repro.sparse.synthetic import SyntheticDataset, make_dataset
 
@@ -64,9 +59,19 @@ class ProblemBundle:
 
 # Dataset materialization is deterministic in (name, seed) and is the
 # dominant build cost for repeated run(spec) calls (benchmark repeats,
-# sweeps over schedules on one dataset) — memoize it. Treat the cached
-# dataset as read-only.
-_cached_dataset = functools.lru_cache(maxsize=8)(make_dataset)
+# sweeps over schedules on one dataset) — memoize it. The cached
+# dataset is *enforced* read-only: every consumer sees the same numpy
+# buffers, so an in-place write anywhere would silently corrupt every
+# later run on the same (name, seed). Frozen flags turn that aliasing
+# hazard into an immediate ValueError at the write site.
+
+
+@functools.lru_cache(maxsize=8)
+def _cached_dataset(name: str, seed: int = 0) -> SyntheticDataset:
+    ds = make_dataset(name, seed=seed)
+    for arr in (ds.A.indptr, ds.A.indices, ds.A.data, ds.y, ds.x_true):
+        arr.flags.writeable = False
+    return ds
 
 
 def build_problem(spec: ExperimentSpec) -> ProblemBundle:
@@ -102,41 +107,10 @@ def _make_device_mesh(p_r: int, p_c: int):
 
 def run(spec: ExperimentSpec, x0: np.ndarray | None = None) -> RunReport:
     """The front door: plan (auto-tuning if asked), build, execute,
-    report. ``wall_time_s`` covers the solver only (first call includes
-    jit compilation; repeat with the same spec shape for steady-state)."""
-    pl: Plan = plan(spec)
-    spec = pl.spec
-    sched, mesh = spec.schedule, spec.mesh
-    bundle = build_problem(spec)
-    n = bundle.dataset.A.n
-    x0 = np.zeros(n, np.float32) if x0 is None else np.asarray(x0, np.float32)
+    report — now a thin loop over the round-incremental ``Session``
+    (``Session(spec, x0).run()``), honoring the spec's ``StopPolicy``.
+    ``wall_time_s`` covers the solver only and splits into
+    ``compile_time_s`` (first chunk, includes jit) + ``solve_time_s``."""
+    from repro.api.session import Session
 
-    if mesh.backend == "simulated":
-        t0 = time.perf_counter()
-        x_j, losses_j = run_parallel_sgd(bundle.team, jnp.asarray(x0), sched)
-        x = np.asarray(x_j)  # blocks until the computation is done
-        losses = np.asarray(losses_j)
-        wall = time.perf_counter() - t0
-    else:
-        mesh_dev = _make_device_mesh(mesh.p_r, mesh.p_c)
-        # the schedule's default "pallas" bundle backend maps to the
-        # identical-math "blocked" path inside shard_map (see
-        # make_hybrid_step) — pass through verbatim.
-        t0 = time.perf_counter()
-        x, losses = run_hybrid_distributed(
-            mesh_dev, bundle.prob2d, bundle.cp, x0, sched,
-            loss_problem=bundle.global_problem,
-        )
-        wall = time.perf_counter() - t0
-
-    final_loss = float(full_loss(bundle.global_problem, jnp.asarray(x)))
-    return RunReport(
-        spec=spec,
-        plan=pl,
-        backend=mesh.backend,
-        x=np.asarray(x),
-        losses=np.asarray(losses, np.float32),
-        final_loss=final_loss,
-        wall_time_s=wall,
-        comm_words=modeled_comm_words(spec),
-    )
+    return Session(spec, x0=x0).run()

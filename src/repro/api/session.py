@@ -1,0 +1,335 @@
+"""Session — the round-incremental execution lifecycle.
+
+``run(spec)`` used to be one opaque block: build, scan every round,
+report. A ``Session`` opens that loop up at round granularity without
+changing a single iterate:
+
+    sess = Session(spec)                 # plan + build once
+    while not sess.done:
+        ev = sess.step_rounds(4)         # advance 4 rounds
+        print(ev.rounds_done, ev.loss)   # weights-so-far, loss sample
+        sess.save("ckpt/run1")           # resumable at any boundary
+    report = sess.report()
+
+    sess2 = Session.restore("ckpt/run1") # later / elsewhere
+    report2 = sess2.run()                # finish under the StopPolicy
+
+Both backends are chunkable underneath: the simulated engine advances
+through ``repro.core.engine.run_engine_chunk`` (one jitted executable
+shared across chunks and sessions — the carry is just the weight
+vector, the round offset is traced) and the shard_map backend through
+``repro.core.distributed.HybridDriver`` (device-resident donated
+carry). Chunked execution reproduces the monolithic single-scan path
+bitwise — both scan the same per-round body over the same global round
+indices — which is what makes save/restore and early stopping safe to
+use in time-to-loss experiments (tests/test_session.py enforces it).
+
+``run()`` is a thin loop over ``step_rounds`` that honors the spec's
+``StopPolicy`` (``target_loss`` / ``max_seconds`` / ``max_rounds``) —
+the paper's §7.5 time-to-loss protocol as a first-class stop condition
+instead of post-hoc arithmetic on a finished trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import Plan, plan
+from repro.api.report import RunReport, modeled_comm_words
+from repro.api.spec import ExperimentSpec
+from repro.core.engine import engine_loss, run_engine_chunk
+from repro.core.distributed import HybridDriver
+from repro.core.problem import full_loss
+from repro.core.teams import global_problem
+from repro.train.checkpoint import (
+    load_session_checkpoint,
+    save_session_checkpoint,
+)
+
+__all__ = ["RoundEvent", "Session"]
+
+
+@dataclasses.dataclass
+class RoundEvent:
+    """What one ``step_rounds`` call observed.
+
+    rounds_done     total rounds completed so far (cumulative).
+    x               weights after those rounds (global (n,) on host).
+    loss            the most recent full-objective sample taken during
+                    this step, or None if no sampling boundary was
+                    crossed (``schedule.loss_every`` semantics).
+    wall_time_s     cumulative solver wall time.
+    compile_time_s  wall accrued to first chunks (jit compile + one
+                    chunk, summed across restores — each process
+                    recompiles) — the split ``RunReport`` carries.
+    comm_words      cumulative modeled per-rank comm volume for the
+                    rounds completed (Table 3 payloads).
+    stop            StopPolicy verdict at this boundary: None, or one of
+                    "target_loss" / "max_seconds" / "max_rounds" /
+                    "rounds" (schedule budget exhausted).
+    """
+
+    rounds_done: int
+    x: np.ndarray
+    loss: float | None
+    wall_time_s: float
+    compile_time_s: float
+    comm_words: dict[str, float]
+    stop: str | None = None
+
+
+class Session:
+    """An open, resumable run of one ``ExperimentSpec``.
+
+    Construction plans the spec (autotune included — ``self.spec`` is
+    the spec as executed) and builds the problem once; every
+    ``step_rounds`` call after that advances the same device-resident
+    carry. The session is the single source of truth for run state:
+    rounds done, loss trace, wall/compile time — ``report()`` is a pure
+    read of it.
+    """
+
+    def __init__(self, spec: ExperimentSpec, x0: np.ndarray | None = None):
+        # imported here: repro.api.run imports Session for its thin
+        # run() wrapper, so the build machinery import must be lazy.
+        from repro.api.run import build_problem, _make_device_mesh
+
+        self.input_spec = spec          # pre-plan (what checkpoints key on)
+        self._plan: Plan = plan(spec)
+        self.spec = self._plan.spec     # post-autotune (what executes)
+        self.bundle = build_problem(self.spec)
+        n = self.bundle.dataset.A.n
+        x0 = np.zeros(n, np.float32) if x0 is None else np.asarray(x0, np.float32)
+
+        self.rounds_done = 0
+        self.losses: list[float] = []
+        self.wall_time_s = 0.0
+        self.compile_time_s = 0.0
+        self.stop_reason: str | None = None
+        # the next chunk's wall is accrued to compile_time_s (set again
+        # on restore: a fresh process recompiles, and that wall must not
+        # masquerade as steady-state solve time)
+        self._first_chunk_pending = True
+
+        if self.spec.mesh.backend == "simulated":
+            self._driver = None
+            self._x = jnp.asarray(x0)
+            self._gp = global_problem(self.bundle.team)
+        else:
+            mesh = _make_device_mesh(self.spec.mesh.p_r, self.spec.mesh.p_c)
+            self._driver = HybridDriver(
+                mesh,
+                self.bundle.prob2d,
+                self.bundle.cp,
+                x0,
+                self.spec.schedule,
+                loss_problem=self.bundle.global_problem,
+            )
+            self._x = None
+            self._gp = None
+
+    # ---- state probes ----
+
+    @property
+    def total_rounds(self) -> int:
+        """The schedule's round budget (the StopPolicy may end sooner)."""
+        return self.spec.schedule.rounds
+
+    @property
+    def done(self) -> bool:
+        return self.rounds_done >= self.total_rounds or self.stop_reason is not None
+
+    def current_x(self) -> np.ndarray:
+        """Current global weights (host copy; blocks on pending work)."""
+        if self._driver is not None:
+            return self._driver.gather()
+        return np.asarray(self._x)
+
+    # ---- the incremental core ----
+
+    def _advance(self, k: int) -> None:
+        """Run k rounds on the backend carry (no loss sampling)."""
+        if self._driver is not None:
+            self._driver.advance(k)
+        else:
+            self._x = run_engine_chunk(
+                self.bundle.team, self._x, self.rounds_done, k, self.spec.schedule
+            )
+        self.rounds_done += k
+
+    def _sample_loss(self) -> float:
+        if self._driver is not None:
+            return self._driver.loss()
+        return float(engine_loss(self._gp, self._x))
+
+    def step_rounds(self, k: int | None = None) -> RoundEvent:
+        """Advance up to ``k`` rounds (default: to the next loss-sampling
+        boundary, or all remaining rounds when ``loss_every`` is 0) and
+        return what happened.
+
+        Internally the advance is split at every ``loss_every`` boundary
+        so the full objective is sampled exactly where the monolithic
+        scan sampled it — arbitrary ``k`` never changes the trace, only
+        how often control returns to the caller. The StopPolicy is
+        evaluated at every boundary, so a step spanning several may end
+        early (``RoundEvent.stop`` says why).
+        """
+        if self.done:
+            raise RuntimeError(
+                f"session is finished ({self.stop_reason or 'rounds'} at round "
+                f"{self.rounds_done}); nothing to step"
+            )
+        sched = self.spec.schedule
+        budget = self.total_rounds
+        if self.spec.stop.max_rounds is not None:
+            budget = min(budget, self.spec.stop.max_rounds)
+        remaining = budget - self.rounds_done
+        if k is None:
+            k = (
+                sched.loss_every - self.rounds_done % sched.loss_every
+                if sched.loss_every
+                else remaining
+            )
+        k = min(int(k), remaining)
+        if k < 1:
+            raise ValueError(f"step_rounds needs k ≥ 1, got {k}")
+
+        loss = None
+        synced = False
+        t0 = time.perf_counter()
+        while k > 0 and self.stop_reason is None:
+            if sched.loss_every:
+                sub = min(k, sched.loss_every - self.rounds_done % sched.loss_every)
+            else:
+                sub = k
+            first = self._first_chunk_pending
+            tc = time.perf_counter()
+            self._advance(sub)
+            sampled = None
+            if sched.loss_every and self.rounds_done % sched.loss_every == 0:
+                sampled = self._sample_loss()  # blocks (device → float)
+                self.losses.append(sampled)
+                loss, synced = sampled, True
+            else:
+                synced = False
+            if first:
+                if sampled is None:
+                    self.current_x()  # block: compile wall must be real
+                    synced = True
+                self.compile_time_s += time.perf_counter() - tc
+                self._first_chunk_pending = False
+            k -= sub
+            # the policy is checked at every boundary, not once per
+            # call: a target crossed mid-step stops the step there.
+            self._check_stop(
+                sampled, wall=self.wall_time_s + (time.perf_counter() - t0)
+            )
+        if not synced:
+            self.current_x()  # block: wall covers all dispatched work
+        self.wall_time_s += time.perf_counter() - t0
+
+        return RoundEvent(
+            rounds_done=self.rounds_done,
+            x=self.current_x(),  # post-sync: a copy, not a timed stall
+            loss=loss,
+            wall_time_s=self.wall_time_s,
+            compile_time_s=self.compile_time_s,
+            comm_words=modeled_comm_words(self.spec, rounds=self.rounds_done),
+            stop=self.stop_reason,
+        )
+
+    def _check_stop(self, loss: float | None, wall: float | None = None) -> None:
+        # target_loss is checked first: a crossing on the final budgeted
+        # round is still a hit (the §7.5 verdict the benchmarks persist),
+        # not a budget exhaustion.
+        stop = self.spec.stop
+        wall = self.wall_time_s if wall is None else wall
+        if (
+            stop.target_loss is not None
+            and loss is not None
+            and loss <= stop.target_loss
+        ):
+            self.stop_reason = "target_loss"
+        elif self.rounds_done >= self.total_rounds:
+            self.stop_reason = "rounds"
+        elif stop.max_rounds is not None and self.rounds_done >= stop.max_rounds:
+            self.stop_reason = "max_rounds"
+        elif stop.max_seconds is not None and wall >= stop.max_seconds:
+            self.stop_reason = "max_seconds"
+
+    def run(self) -> RunReport:
+        """Drive the session to its stop condition and report — the
+        whole old ``run(spec)``, now a loop anything can interleave
+        with."""
+        while not self.done:
+            self.step_rounds()
+        return self.report()
+
+    def report(self) -> RunReport:
+        """The uniform ``RunReport`` for the rounds completed so far."""
+        x = self.current_x()
+        final_loss = float(full_loss(self.bundle.global_problem, jnp.asarray(x)))
+        return RunReport(
+            spec=self.spec,
+            plan=self._plan,
+            backend=self.spec.mesh.backend,
+            x=x,
+            losses=np.asarray(self.losses, np.float32),
+            final_loss=final_loss,
+            wall_time_s=self.wall_time_s,
+            comm_words=modeled_comm_words(self.spec, rounds=self.rounds_done),
+            compile_time_s=self.compile_time_s,
+            solve_time_s=max(self.wall_time_s - self.compile_time_s, 0.0),
+            rounds_completed=self.rounds_done,
+            stop_reason=self.stop_reason,
+        )
+
+    # ---- checkpoint / resume ----
+
+    def save(self, path) -> None:
+        """Checkpoint the session carry at the current round boundary
+        (atomic; keyed by the input spec's content hash)."""
+        save_session_checkpoint(
+            path,
+            spec_dict=self.input_spec.to_dict(),
+            spec_hash=self.input_spec.content_hash(),
+            rounds_done=self.rounds_done,
+            x=self.current_x(),
+            losses=np.asarray(self.losses, np.float32),
+            wall_time_s=self.wall_time_s,
+            compile_time_s=self.compile_time_s,
+        )
+
+    @classmethod
+    def restore(cls, path, spec: ExperimentSpec | None = None) -> "Session":
+        """Reopen a saved session and fast-forward to its round.
+
+        With ``spec`` given, its ``content_hash()`` must equal the hash
+        the checkpoint was written under (``SpecMismatchError``
+        otherwise) — resuming under a different experiment is always a
+        hard error. With ``spec`` omitted, the spec is rebuilt from the
+        checkpoint itself.
+
+        The restored session continues the identical round sequence:
+        the round counter is part of the carry, so rounds r, r+1, …
+        sample exactly what the uninterrupted run would have.
+        """
+        expect = spec.content_hash() if spec is not None else None
+        ck = load_session_checkpoint(path, expect_spec_hash=expect)
+        restored_spec = (
+            spec if spec is not None else ExperimentSpec.from_dict(ck.spec_dict)
+        )
+        sess = cls(restored_spec, x0=ck.x)
+        sess.rounds_done = ck.rounds_done
+        if sess._driver is not None:
+            sess._driver.rounds_done = ck.rounds_done
+        sess.losses = [float(v) for v in ck.losses]
+        sess.wall_time_s = ck.wall_time_s
+        sess.compile_time_s = ck.compile_time_s
+        sess._first_chunk_pending = True  # this process must recompile
+        sess._check_stop(sess.losses[-1] if sess.losses else None)
+        return sess

@@ -21,6 +21,7 @@ communication-only and is canonicalized from the mesh.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 
 from repro.core.engine import ParallelSGDSchedule
@@ -29,6 +30,51 @@ from repro.sparse.partition import PARTITIONERS
 from repro.sparse.synthetic import dataset_stats
 
 BACKENDS = ("simulated", "shard_map")
+
+
+@dataclasses.dataclass(frozen=True)
+class StopPolicy:
+    """When to stop *before* the schedule's round budget runs out.
+
+    The schedule's ``rounds`` is the hard budget (the compiled loop
+    shape); the policy ends the run early at round granularity — the
+    paper's §7.5 time-to-loss protocol made first-class instead of
+    being post-hoc arithmetic on a finished trace.
+
+    target_loss  stop once a sampled full objective ≤ this (needs
+                 ``schedule.loss_every > 0`` — the objective is only
+                 observable on sampling boundaries).
+    max_seconds  stop once cumulative solver wall time crosses this
+                 (checked between chunks; the running chunk finishes).
+    max_rounds   stop after this many rounds even if the schedule asks
+                 for more (resume-friendly: restore, raise, continue).
+    """
+
+    target_loss: float | None = None
+    max_seconds: float | None = None
+    max_rounds: int | None = None
+
+    def __post_init__(self):
+        if self.max_seconds is not None and self.max_seconds < 0:
+            raise ValueError(f"max_seconds={self.max_seconds} must be ≥ 0")
+        if self.max_rounds is not None and self.max_rounds < 1:
+            raise ValueError(f"max_rounds={self.max_rounds} must be ≥ 1")
+
+    @property
+    def trivial(self) -> bool:
+        """True when no knob is set (run the full schedule)."""
+        return (
+            self.target_loss is None
+            and self.max_seconds is None
+            and self.max_rounds is None
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StopPolicy":
+        return cls(**d)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +137,8 @@ class ExperimentSpec:
                  paper's cyclic-sampling requirement). Pin it when
                  comparing schedules with different s·b so they see the
                  identical sample sequence.
+    stop         round-granular early-stop policy (``StopPolicy``);
+                 default: run the schedule's full round budget.
     name         optional label for reports/sweeps.
     """
 
@@ -101,12 +149,18 @@ class ExperimentSpec:
     seed: int = 0
     autotune: bool = False
     row_multiple: int | None = None
+    stop: StopPolicy = dataclasses.field(default_factory=StopPolicy)
     name: str = ""
 
     def __post_init__(self):
         dataset_stats(self.dataset)  # raises on unknown name
         if self.machine not in MACHINES:
             raise ValueError(f"machine={self.machine!r} not in {sorted(MACHINES)}")
+        if self.stop.target_loss is not None and not self.schedule.loss_every:
+            raise ValueError(
+                "stop.target_loss needs schedule.loss_every > 0: the objective is "
+                "only observable on loss-sampling boundaries"
+            )
         if self.schedule.p_r != self.mesh.p_r:
             raise ValueError(
                 f"schedule.p_r={self.schedule.p_r} != mesh.p_r={self.mesh.p_r}: row "
@@ -135,6 +189,7 @@ class ExperimentSpec:
             "row_multiple": self.row_multiple,
             "schedule": dataclasses.asdict(self.schedule),
             "mesh": self.mesh.to_dict(),
+            "stop": self.stop.to_dict(),
         }
 
     @classmethod
@@ -142,7 +197,8 @@ class ExperimentSpec:
         d = dict(d)
         schedule = ParallelSGDSchedule(**d.pop("schedule"))
         mesh = MeshSpec.from_dict(d.pop("mesh", {}))
-        return cls(schedule=schedule, mesh=mesh, **d)
+        stop = StopPolicy.from_dict(d.pop("stop", {}))
+        return cls(schedule=schedule, mesh=mesh, stop=stop, **d)
 
     def to_json(self, indent: int = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent)
@@ -150,3 +206,12 @@ class ExperimentSpec:
     @classmethod
     def from_json(cls, text: str) -> "ExperimentSpec":
         return cls.from_dict(json.loads(text))
+
+    def content_hash(self) -> str:
+        """Stable hash of the full spec content (every field, including
+        ``name``). This keys session checkpoints and sweep resume
+        records: a checkpoint written under one spec can only be resumed
+        under a spec with the identical hash — anything else is a hard
+        error, never a silent renumber."""
+        payload = json.dumps(self.to_dict(), sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]

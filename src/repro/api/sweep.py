@@ -1,0 +1,162 @@
+"""sweep(specs) — the processor-scale sweep as one resumable call.
+
+The paper's headline artifacts are sweeps over the (p_r, p_c, s, τ)
+family — Table 11 / Figure 6 time-to-loss rows, Figure 5 mesh sweeps.
+This module makes that a first-class operation instead of a for-loop
+around ``run()``:
+
+* points run sequentially in one process, so the dataset/problem cache
+  (``repro.api.run._cached_dataset``) is shared across every point on
+  the same (dataset, seed) — the dominant build cost is paid once;
+* with ``resume_dir``, every finished point persists its report as
+  ``<spec content hash>.report.json``; re-invoking the same sweep after
+  an interruption rehydrates finished points from disk and only runs
+  the rest (the CLI's ``--resume``);
+* the result knows how to print the paper-style time-to-loss table
+  (§7.5 protocol: seconds/rounds to the first crossing of a target).
+
+``max_points`` bounds how many *unfinished* points one invocation runs
+— the building block for budgeted/interruptible sweeps and the CI
+resume smoke test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.api.report import RunReport
+from repro.api.spec import ExperimentSpec
+
+__all__ = ["SweepReport", "sweep"]
+
+
+@dataclasses.dataclass
+class SweepReport:
+    """All points of one sweep, finished or rehydrated.
+
+    reports  one ``RunReport`` per spec, in spec order (rehydrated
+             reports have ``x=None`` — weights live in checkpoints).
+    resumed  per point: True when the report was loaded from
+             ``resume_dir`` instead of being run in this invocation.
+    skipped  specs beyond ``max_points`` that this invocation did not
+             reach (their hashes; rerun with ``resume_dir`` to finish).
+    """
+
+    reports: list[RunReport]
+    resumed: list[bool]
+    skipped: list[str] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> str:
+        ran = sum(1 for r in self.resumed if not r)
+        return (
+            f"sweep: {len(self.reports)} point(s) ({ran} run, "
+            f"{len(self.reports) - ran} resumed, {len(self.skipped)} skipped)"
+        )
+
+    def time_to_loss_table(self, target: float | None = None) -> str:
+        """The paper-style table: per point, wall seconds and rounds to
+        the first crossing of the target loss.
+
+        The target is per-point ``spec.stop.target_loss`` when set
+        (runs that stopped on it report their measured wall directly);
+        ``target`` is the fallback for points without one, applied
+        post-hoc to their loss trace via ``RunReport.time_to_target``.
+        """
+        rows = [
+            f"{'point':24s} {'backend':9s} {'mesh':7s} {'s':>3s} {'b':>4s} "
+            f"{'τ':>4s} {'target':>8s} {'sec-to-target':>13s} {'rounds':>6s} "
+            f"{'loss':>8s} hit"
+        ]
+        for rep in self.reports:
+            spec = rep.spec
+            tgt = spec.stop.target_loss if spec.stop.target_loss is not None else target
+            if tgt is not None and rep.stop_reason != "target_loss" and not len(rep.losses):
+                tgt = None  # no trace to cross (loss_every=0) — report the full run
+            if tgt is None:
+                sec, rounds, loss, hit = rep.wall_time_s, len(rep.losses), rep.final_loss, False
+                tgt_s = "-"
+            elif rep.stop_reason == "target_loss":
+                # the run *stopped* at the crossing — the wall time is
+                # the measured time-to-target, not a scaled estimate
+                sec, rounds, loss, hit = (
+                    rep.wall_time_s, rep.rounds_completed, float(rep.losses[-1]), True,
+                )
+                tgt_s = f"{tgt:.4f}"
+            else:
+                sec, rounds, loss, hit = rep.time_to_target(tgt)
+                tgt_s = f"{tgt:.4f}"
+            sched = spec.schedule
+            rows.append(
+                f"{(spec.name or spec.dataset)[:24]:24s} {rep.backend:9s} "
+                f"{spec.mesh.p_r}×{spec.mesh.p_c:<5d} {sched.s:>3d} {sched.b:>4d} "
+                f"{sched.tau:>4d} {tgt_s:>8s} {sec:>13.4f} {rounds:>6d} "
+                f"{loss:>8.4f} {'yes' if hit else 'no'}"
+            )
+        return "\n".join(rows)
+
+    def to_dict(self) -> dict:
+        return {
+            "reports": [r.to_dict() for r in self.reports],
+            "resumed": list(self.resumed),
+            "skipped": list(self.skipped),
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+
+def _record_path(resume_dir: Path, spec: ExperimentSpec) -> Path:
+    return resume_dir / f"{spec.content_hash()}.report.json"
+
+
+def sweep(
+    specs: Sequence[ExperimentSpec] | Iterable[ExperimentSpec],
+    resume_dir: str | Path | None = None,
+    max_points: int | None = None,
+    x0: np.ndarray | None = None,
+) -> SweepReport:
+    """Run every spec (sequentially, shared dataset cache) and collect
+    the reports.
+
+    With ``resume_dir``, finished points are persisted there keyed by
+    spec content hash and never re-run — interrupt the sweep anywhere
+    and re-invoke to continue. ``max_points`` caps how many unfinished
+    points this invocation executes (the rest are reported in
+    ``skipped``).
+    """
+    from repro.api.session import Session
+
+    specs = list(specs)
+    resume_dir = Path(resume_dir) if resume_dir is not None else None
+    if resume_dir is not None:
+        resume_dir.mkdir(parents=True, exist_ok=True)
+
+    reports: list[RunReport] = []
+    resumed: list[bool] = []
+    skipped: list[str] = []
+    ran = 0
+    for spec in specs:
+        if resume_dir is not None:
+            rec = _record_path(resume_dir, spec)
+            if rec.exists():
+                reports.append(RunReport.from_json(rec.read_text()))
+                resumed.append(True)
+                continue
+        if max_points is not None and ran >= max_points:
+            skipped.append(spec.content_hash())
+            continue
+        report = Session(spec, x0=x0).run()
+        ran += 1
+        if resume_dir is not None:
+            rec = _record_path(resume_dir, spec)
+            tmp = rec.with_suffix(".tmp")
+            tmp.write_text(report.to_json())
+            tmp.replace(rec)
+        reports.append(report)
+        resumed.append(False)
+    return SweepReport(reports=reports, resumed=resumed, skipped=skipped)

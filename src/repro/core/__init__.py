@@ -18,6 +18,11 @@ Configured corners, kept as thin wrappers for compatibility:
   run_hybrid_distributed  HybridSGD under shard_map on a 2D device mesh
                           (consumes the same ParallelSGDSchedule and
                           shares the engine's bundle primitive)
+  HybridDriver         the round-incremental form of the same executor
+                       (device-resident carry; advance k rounds at a
+                       time — what repro.api.Session drives)
+  run_engine_chunk     the simulated engine's round-incremental entry
+                       (jit-cached chunk executable, traced offset)
 
 Corner identities (tested): hybrid(p_r=1) ≡ s-step; hybrid(p_r=p, s=1)
 ≡ FedAvg; s-step(s=1) ≡ SGD; fedavg(τ=1) ≡ synchronous MB-SGD.
@@ -33,6 +38,7 @@ from repro.core.engine import (
     ParallelSGDSchedule,
     bundle_gram_v,
     inner_corrections,
+    run_engine_chunk,
     run_parallel_sgd,
     single_team,
 )
@@ -43,6 +49,7 @@ from repro.core.fedavg import run_fedavg
 from repro.core.hybrid import run_hybrid_sgd
 from repro.core.distributed import (
     Hybrid2DProblem,
+    HybridDriver,
     build_2d_problem,
     gather_x,
     make_hybrid_step,
@@ -58,6 +65,7 @@ __all__ = [
     "ParallelSGDSchedule",
     "bundle_gram_v",
     "inner_corrections",
+    "run_engine_chunk",
     "run_parallel_sgd",
     "single_team",
     "run_sgd",
@@ -69,6 +77,7 @@ __all__ = [
     "run_fedavg",
     "run_hybrid_sgd",
     "Hybrid2DProblem",
+    "HybridDriver",
     "build_2d_problem",
     "gather_x",
     "make_hybrid_step",

@@ -269,6 +269,74 @@ def make_hybrid_step(
     return step
 
 
+class HybridDriver:
+    """Round-incremental shard_map executor — the chunkable form of the
+    old run-everything loop.
+
+    Holds the device-resident state (placed ELL blocks + the sharded,
+    donated weight vector) between calls, so drivers above it — the
+    ``repro.api.Session`` lifecycle, dashboards, async averaging — can
+    advance the computation ``k`` rounds at a time, probe the objective,
+    checkpoint, and keep going, with the same chain-of-async-dispatches
+    execution the monolithic loop had (one jitted step, donated carry,
+    no per-round host sync).
+
+    The round counter is part of the carry: ``advance(k)`` runs global
+    rounds ``rounds_done .. rounds_done+k-1``, so chunked execution
+    reproduces the uninterrupted loop's sample sequence exactly.
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        prob: Hybrid2DProblem,
+        cp: ColumnPartition,
+        x0: np.ndarray,
+        sched: ParallelSGDSchedule,
+        loss_problem: LogisticProblem | None = None,
+        rounds_done: int = 0,
+    ):
+        self.prob = prob
+        self.cp = cp
+        self.sched = sched
+        self.loss_problem = loss_problem
+        self.rounds_done = int(rounds_done)
+        self._step = make_hybrid_step(mesh, prob, sched)
+        data_sh = NamedSharding(mesh, P("rows", "cols"))
+        self._x_sh = NamedSharding(mesh, P("cols"))
+        self._idx = jax.device_put(prob.indices, data_sh)
+        self._val = jax.device_put(prob.values, data_sh)
+        self._x_pad = jax.device_put(
+            jnp.asarray(scatter_x(np.asarray(x0), cp, prob.n_loc)), self._x_sh
+        )
+
+    def advance(self, k: int) -> None:
+        """Run ``k`` rounds; weights stay device-resident (async)."""
+        for _ in range(int(k)):
+            self._x_pad = self._step(
+                self._idx, self._val, self._x_pad, jnp.int32(self.rounds_done)
+            )
+            self.rounds_done += 1
+
+    def gather(self) -> np.ndarray:
+        """Current global weights (n,) — blocks on the dispatch chain."""
+        return gather_x(np.asarray(self._x_pad), self.cp, self.prob.n_loc, self.prob.n)
+
+    def set_x(self, x: np.ndarray) -> None:
+        """Replace the weights (checkpoint restore). Padded layout slots
+        never receive updates (no row references them), so a
+        gather → set_x round trip is lossless."""
+        self._x_pad = jax.device_put(
+            jnp.asarray(scatter_x(np.asarray(x), self.cp, self.prob.n_loc)), self._x_sh
+        )
+
+    def loss(self) -> float:
+        """Full global objective at the current iterate."""
+        if self.loss_problem is None:
+            raise ValueError("HybridDriver was built without loss_problem")
+        return float(full_loss(self.loss_problem, jnp.asarray(self.gather())))
+
+
 def run_hybrid_distributed(
     mesh: Mesh,
     prob: Hybrid2DProblem,
@@ -286,16 +354,13 @@ def run_hybrid_distributed(
 ):
     """Driver: place data once, run ``sched.rounds`` rounds, gather x.
 
-    Returns ``(x, losses)`` — the same contract as the simulated
-    engine's ``run_parallel_sgd``: the full global objective is sampled
-    every ``sched.loss_every`` rounds (empty trace when 0). Sampling
-    the loss needs the global problem, so pass ``loss_problem`` (the
-    repro.api front door wires this automatically).
-
-    The weights stay device-resident between rounds: the jitted step
-    donates ``x_pad`` and returns it already in the ``P("cols")``
-    sharding, so the loop is a chain of async dispatches with no
-    per-round host sync.
+    Now a thin loop over ``HybridDriver`` — one ``advance`` per
+    loss-sampling chunk. Returns ``(x, losses)`` — the same contract as
+    the simulated engine's ``run_parallel_sgd``: the full global
+    objective is sampled every ``sched.loss_every`` rounds (empty trace
+    when 0). Sampling the loss needs the global problem, so pass
+    ``loss_problem`` (the repro.api front door wires this
+    automatically).
 
     The legacy signature ``run_hybrid_distributed(mesh, prob, cp, x0,
     s, b, eta, tau, rounds, gram=...)`` still works (returning bare
@@ -318,19 +383,14 @@ def run_hybrid_distributed(
     if sched.loss_every and loss_problem is None:
         raise ValueError("loss_every > 0 needs loss_problem (the global LogisticProblem)")
 
-    step = make_hybrid_step(mesh, prob, sched)
-    data_sh = NamedSharding(mesh, P("rows", "cols"))
-    x_sh = NamedSharding(mesh, P("cols"))
-    idx = jax.device_put(prob.indices, data_sh)
-    val = jax.device_put(prob.values, data_sh)
-    x_pad = jax.device_put(jnp.asarray(scatter_x(np.asarray(x0), cp, prob.n_loc)), x_sh)
+    driver = HybridDriver(mesh, prob, cp, x0, sched, loss_problem=loss_problem)
     losses = []
-    for r in range(sched.rounds):
-        x_pad = step(idx, val, x_pad, jnp.int32(r))
-        if sched.loss_every and (r + 1) % sched.loss_every == 0:
-            xg = gather_x(np.asarray(x_pad), cp, prob.n_loc, prob.n)
-            losses.append(float(full_loss(loss_problem, jnp.asarray(xg))))
-    x = gather_x(np.asarray(x_pad), cp, prob.n_loc, prob.n)
+    chunk = sched.loss_every if sched.loss_every else sched.rounds
+    while driver.rounds_done < sched.rounds:
+        driver.advance(min(chunk, sched.rounds - driver.rounds_done))
+        if sched.loss_every and driver.rounds_done % sched.loss_every == 0:
+            losses.append(driver.loss())
+    x = driver.gather()
     if legacy:
         return x
     return x, np.asarray(losses, dtype=np.float32)

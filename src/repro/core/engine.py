@@ -206,6 +206,27 @@ def _team_inner_iterations(indices, values, n: int, x, round_idx, eta,
     return x
 
 
+def _one_round(tp, x, r, eta, sched):
+    """One outer round: τ inner iterations per row team + the p_r-team
+    average. The single shared round body — the monolithic scan and the
+    chunked session path both close over exactly this function, so the
+    two cannot drift (and stay bitwise-identical)."""
+
+    def team(args):
+        idx, val = args
+        return _team_inner_iterations(idx, val, tp.n, x, r, eta, sched)
+
+    if sched.s == 1:
+        # FedAvg/MB-SGD corner: per-team working set is one (b, w)
+        # batch — run all teams batched (the old run_fedavg vmap).
+        xs = jax.vmap(team)((tp.indices, tp.values))
+    else:
+        # lax.map (not vmap): teams run sequentially on one device,
+        # bounding peak memory at one team's bundle working set.
+        xs = jax.lax.map(team, (tp.indices, tp.values))
+    return jnp.mean(xs, axis=0)
+
+
 @partial(jax.jit, static_argnames=("sched",))
 def _run_engine(tp, x0, eta, sched):
     gp = global_problem(tp)
@@ -214,19 +235,7 @@ def _run_engine(tp, x0, eta, sched):
     n_chunks = max(sched.rounds // chunk, 1)
 
     def one_round(x, r):
-        def team(args):
-            idx, val = args
-            return _team_inner_iterations(idx, val, tp.n, x, r, eta, sched)
-
-        if sched.s == 1:
-            # FedAvg/MB-SGD corner: per-team working set is one (b, w)
-            # batch — run all teams batched (the old run_fedavg vmap).
-            xs = jax.vmap(team)((tp.indices, tp.values))
-        else:
-            # lax.map (not vmap): teams run sequentially on one device,
-            # bounding peak memory at one team's bundle working set.
-            xs = jax.lax.map(team, (tp.indices, tp.values))
-        return jnp.mean(xs, axis=0), None
+        return _one_round(tp, x, r, eta, sched), None
 
     def outer(x, c):
         x, _ = jax.lax.scan(one_round, x, c * chunk + jnp.arange(chunk))
@@ -236,6 +245,65 @@ def _run_engine(tp, x0, eta, sched):
     if not sched.loss_every:
         losses = jnp.zeros((0,), losses.dtype)
     return x, losses
+
+
+# ---- round-incremental (chunked) execution --------------------------
+#
+# The Session front door (repro.api.session) advances the engine k
+# rounds at a time instead of one scan over all of them. The chunk
+# entry point below is jitted with a *normalized* schedule (loop-shape
+# knobs zeroed) and a static chunk length, so one compiled executable
+# is shared across chunks, across sessions, and across schedules that
+# differ only in (rounds, loss_every, eta) — the carry in/out is just
+# the weight vector, and the round index arrives as a traced operand so
+# chunk r0..r0+k matches rounds r0..r0+k of the monolithic scan
+# bitwise.
+
+
+def _normalize_for_chunk(sched: ParallelSGDSchedule) -> ParallelSGDSchedule:
+    """Zero every knob the per-round math does not read (η is traced;
+    rounds/loss_every belong to the driver; p_c is communication-only)
+    so the jit cache keys only on what changes the computation."""
+    return dataclasses.replace(sched, eta=0.0, rounds=1, loss_every=0, p_c=1)
+
+
+@partial(jax.jit, static_argnames=("sched", "k"))
+def _engine_chunk(tp, x, r0, eta, sched, k):
+    """Advance rounds r0 .. r0+k-1 from carry ``x`` (chunk of the same
+    scan the monolithic path runs — identical per-round graph)."""
+
+    def one_round(x, r):
+        return _one_round(tp, x, r, eta, sched), None
+
+    x, _ = jax.lax.scan(one_round, x, r0 + jnp.arange(k))
+    return x
+
+
+@jax.jit
+def engine_loss(gp, x):
+    """The session's loss probe — same ``full_loss`` the monolithic
+    scan samples at chunk boundaries."""
+    return full_loss(gp, x)
+
+
+def run_engine_chunk(
+    tp: TeamProblem,
+    x: jnp.ndarray,
+    round_offset: int,
+    k: int,
+    sched: ParallelSGDSchedule,
+) -> jnp.ndarray:
+    """Run ``k`` rounds starting at global round ``round_offset`` and
+    return the new weights (device-resident; no host sync).
+
+    This is the carry-in/carry-out primitive under ``repro.api.Session``
+    — calling it with offsets 0, k, 2k, … reproduces
+    ``run_parallel_sgd``'s iterate sequence bitwise, because both paths
+    scan the same ``_one_round`` body over the same round indices."""
+    eta = jnp.asarray(sched.eta, x.dtype)
+    return _engine_chunk(
+        tp, x, jnp.int32(round_offset), eta, _normalize_for_chunk(sched), int(k)
+    )
 
 
 def run_parallel_sgd(

@@ -6,12 +6,21 @@ twin of ``repro.launch.train``'s flag-style CLI:
     PYTHONPATH=src python -m repro.launch.sweep --spec spec.json
     PYTHONPATH=src python -m repro.launch.sweep --spec sweep.json --out results.json
     PYTHONPATH=src python -m repro.launch.sweep --spec spec.json --plan-only
+    PYTHONPATH=src python -m repro.launch.sweep --spec sweep.json --resume ckpt/ --table
 
 The spec file holds one ``ExperimentSpec`` dict or a list of them (a
 sweep). Each spec is cost-model planned (Eq. 4 breakdown + regime;
 Eq. 5–6 autotune when the spec asks) and then run on its declared
-backend — ``--plan-only`` stops after planning, which needs no devices
-and no dataset materialization (the CI smoke path).
+backend through ``repro.api.sweep`` — one process, shared dataset
+cache across points.
+
+``--plan-only`` stops after planning, which needs no devices and no
+dataset materialization (the CI smoke path). ``--resume DIR`` persists
+each finished point's report under DIR keyed by spec content hash:
+interrupt the sweep anywhere (Ctrl-C, preemption, ``--max-points``)
+and re-invoke with the same ``--resume`` to continue — finished points
+are rehydrated, never re-run. ``--table`` prints the paper-style
+time-to-loss table (§7.5) over the collected reports.
 """
 
 from __future__ import annotations
@@ -20,7 +29,7 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.api import ExperimentSpec, plan, run
+from repro.api import ExperimentSpec, plan, sweep
 
 
 def load_specs(path: Path) -> list[ExperimentSpec]:
@@ -42,6 +51,17 @@ def main(argv: list[str] | None = None) -> None:
                     help="cost-model only — no build, no devices, no training")
     ap.add_argument("--out", type=Path, default=None,
                     help="write reports (JSON list) here")
+    ap.add_argument("--resume", type=Path, default=None, metavar="DIR",
+                    help="persist finished points here (keyed by spec content "
+                         "hash) and skip them on re-invocation")
+    ap.add_argument("--max-points", type=int, default=None, metavar="N",
+                    help="run at most N unfinished points this invocation "
+                         "(continue later with --resume)")
+    ap.add_argument("--table", action="store_true",
+                    help="print the paper-style time-to-loss table (§7.5)")
+    ap.add_argument("--target-loss", type=float, default=None,
+                    help="fallback target for --table points without a "
+                         "stop.target_loss of their own")
     args = ap.parse_args(argv)
 
     specs = load_specs(args.spec)
@@ -49,19 +69,30 @@ def main(argv: list[str] | None = None) -> None:
     for spec in specs:
         pl = plan(spec)
         print(f"[plan ] {pl.summary()}", flush=True)
-        if args.plan_only:
-            records.append({"spec": pl.spec.to_dict(), "predicted_total_s": pl.cost.total,
-                            "regime": pl.regime})
-            continue
-        report = run(spec)
-        print(f"[run  ] {report.summary()}", flush=True)
-        records.append(report.to_dict())
+        records.append({"spec": pl.spec.to_dict(),
+                        "predicted_total_s": pl.cost.total, "regime": pl.regime})
+    if args.plan_only:
+        _finish(args, records, f"{len(records)} spec(s) planned")
+        return
 
+    result = sweep(specs, resume_dir=args.resume, max_points=args.max_points)
+    for rep, was_resumed in zip(result.reports, result.resumed):
+        tag = "skip " if was_resumed else "run  "
+        print(f"[{tag}] {rep.summary()}", flush=True)
+    for h in result.skipped:
+        print(f"[defer] point {h} not reached (--max-points); re-invoke with "
+              f"--resume to finish", flush=True)
+    if args.table and result.reports:
+        print(result.time_to_loss_table(target=args.target_loss))
+    _finish(args, result.to_dict()["reports"], result.summary())
+
+
+def _finish(args, records, summary: str) -> None:
     if args.out:
         args.out.write_text(json.dumps(records, indent=2))
-        print(f"[done ] {len(records)} record(s) → {args.out}")
+        print(f"[done ] {summary} → {args.out}")
     else:
-        print(f"[done ] {len(records)} spec(s) processed")
+        print(f"[done ] {summary}")
 
 
 if __name__ == "__main__":

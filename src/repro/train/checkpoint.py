@@ -1,18 +1,49 @@
-"""Checkpointing: flat-npz save/restore of arbitrary pytrees.
+"""Checkpointing: flat-npz save/restore of pytrees + session state.
 
-No external deps (no orbax): the tree is flattened with '/'-joined key
-paths into a single .npz plus a small JSON manifest for the treedef.
-Atomic via write-to-temp + rename.
+No external deps (no orbax). Two layers:
+
+* pytree checkpoints (``save_checkpoint`` / ``restore_checkpoint``) —
+  the NN training loop's format: the tree is flattened with '/'-joined
+  key paths into a single .npz plus a small JSON manifest for the
+  treedef.
+* session checkpoints (``save_session_checkpoint`` /
+  ``load_session_checkpoint``) — the ``repro.api.Session`` lifecycle's
+  format: the solver carry (weights, loss trace) in an .npz plus a JSON
+  manifest holding the full spec dict, its content hash, and the round
+  counter. The hash keys the checkpoint: restoring under a spec whose
+  ``content_hash()`` differs is a hard ``SpecMismatchError`` — a
+  checkpoint is only ever resumed into the exact experiment that wrote
+  it.
+
+Everything is atomic via write-to-temp + rename.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 from pathlib import Path
 
 import jax
 import numpy as np
+
+
+class SpecMismatchError(ValueError):
+    """A session checkpoint was opened under a different spec."""
+
+
+def _write_atomic(path: Path, npz_payload: dict, manifest: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, **npz_payload)
+    tmp_manifest = path.with_suffix(".tmp.json")
+    tmp_manifest.write_text(json.dumps(manifest))
+    os.replace(tmp, path.with_suffix(".npz"))
+    os.replace(tmp_manifest, path.with_suffix(".json"))
+
+
+# ---------------- pytree checkpoints (NN training loop) ----------------
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -24,16 +55,8 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 
 def save_checkpoint(path: str | os.PathLike, tree, step: int) -> None:
-    path = Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    tmp = path.with_suffix(".tmp.npz")
     flat = _flatten(tree)
-    np.savez(tmp, **flat)
-    manifest = {"step": step, "keys": sorted(flat)}
-    tmp_manifest = path.with_suffix(".tmp.json")
-    tmp_manifest.write_text(json.dumps(manifest))
-    os.replace(tmp, path.with_suffix(".npz"))
-    os.replace(tmp_manifest, path.with_suffix(".json"))
+    _write_atomic(Path(path), flat, {"step": step, "keys": sorted(flat)})
 
 
 def restore_checkpoint(path: str | os.PathLike, tree_like):
@@ -54,3 +77,81 @@ def restore_checkpoint(path: str | os.PathLike, tree_like):
             raise ValueError(f"checkpoint shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
         new_leaves.append(arr.astype(np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), meta["step"]
+
+
+# ---------------- session checkpoints (repro.api.Session) ----------------
+
+_SESSION_FORMAT = "repro-session-v1"
+
+
+@dataclasses.dataclass
+class SessionCheckpoint:
+    """One saved ``Session`` carry — everything needed to fast-forward a
+    freshly built session to the interrupted round."""
+
+    spec_dict: dict
+    spec_hash: str
+    rounds_done: int
+    x: np.ndarray
+    losses: np.ndarray
+    wall_time_s: float
+    compile_time_s: float
+
+
+def save_session_checkpoint(
+    path: str | os.PathLike,
+    *,
+    spec_dict: dict,
+    spec_hash: str,
+    rounds_done: int,
+    x: np.ndarray,
+    losses: np.ndarray,
+    wall_time_s: float,
+    compile_time_s: float,
+) -> None:
+    manifest = {
+        "format": _SESSION_FORMAT,
+        "spec": spec_dict,
+        "spec_hash": spec_hash,
+        "rounds_done": int(rounds_done),
+        "wall_time_s": float(wall_time_s),
+        "compile_time_s": float(compile_time_s),
+    }
+    payload = {
+        "x": np.asarray(x),
+        "losses": np.asarray(losses, np.float32),
+    }
+    _write_atomic(Path(path), payload, manifest)
+
+
+def load_session_checkpoint(
+    path: str | os.PathLike, expect_spec_hash: str | None = None
+) -> SessionCheckpoint:
+    """Load a session checkpoint; with ``expect_spec_hash``, refuse
+    (``SpecMismatchError``) if the checkpoint was written under a
+    different spec."""
+    path = Path(path)
+    npz, manifest = path.with_suffix(".npz"), path.with_suffix(".json")
+    if not npz.exists() or not manifest.exists():
+        raise FileNotFoundError(f"no session checkpoint at {path}(.npz/.json)")
+    meta = json.loads(manifest.read_text())
+    if meta.get("format") != _SESSION_FORMAT:
+        raise ValueError(
+            f"{path}: not a session checkpoint (format={meta.get('format')!r})"
+        )
+    if expect_spec_hash is not None and meta["spec_hash"] != expect_spec_hash:
+        raise SpecMismatchError(
+            f"{path}: checkpoint was written under spec hash {meta['spec_hash']} "
+            f"but the session's spec hashes to {expect_spec_hash} — a checkpoint "
+            f"only resumes into the exact spec that wrote it"
+        )
+    data = np.load(npz)
+    return SessionCheckpoint(
+        spec_dict=meta["spec"],
+        spec_hash=meta["spec_hash"],
+        rounds_done=int(meta["rounds_done"]),
+        x=data["x"],
+        losses=data["losses"],
+        wall_time_s=float(meta["wall_time_s"]),
+        compile_time_s=float(meta["compile_time_s"]),
+    )

@@ -16,7 +16,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.api import ExperimentSpec, MeshSpec, build_problem, plan, run
+from repro.api import ExperimentSpec, MeshSpec, StopPolicy, build_problem, plan, run
 from repro.api.spec import dataset_stats
 from repro.core import ParallelSGDSchedule, run_parallel_sgd
 from repro.costmodel import MACHINES, HybridConfig, hybrid_epoch_cost
@@ -71,6 +71,52 @@ def test_spec_rejects_unknown_names():
         MeshSpec(backend="no-such-backend")
     with pytest.raises(ValueError):
         MeshSpec(partitioner="no-such-partitioner")
+
+
+def test_spec_rejects_degenerate_mesh_and_gram():
+    with pytest.raises(ValueError, match="1×1"):
+        MeshSpec(p_r=0)
+    with pytest.raises(ValueError, match="1×1"):
+        MeshSpec(p_c=-1)
+    with pytest.raises(ValueError, match="gram"):
+        ParallelSGDSchedule(gram="no-such-gram")
+
+
+def test_stop_policy_validation():
+    with pytest.raises(ValueError, match="max_seconds"):
+        StopPolicy(max_seconds=-1.0)
+    with pytest.raises(ValueError, match="max_rounds"):
+        StopPolicy(max_rounds=0)
+    # target_loss is only observable on loss-sampling boundaries
+    sched = ParallelSGDSchedule.hybrid(1, 2, 8, 0.05, 8, rounds=4)  # loss_every=0
+    with pytest.raises(ValueError, match="loss_every"):
+        ExperimentSpec(dataset=DATASET, schedule=sched,
+                       stop=StopPolicy(target_loss=0.5))
+    assert StopPolicy().trivial and not StopPolicy(max_rounds=1).trivial
+
+
+def test_spec_json_round_trip_with_partitioner_and_stop():
+    """Satellite: non-default partitioner + every StopPolicy knob must
+    survive the JSON round trip (and the content hash must track it)."""
+    spec = hybrid_spec(
+        mesh=MeshSpec(p_r=2, p_c=4, backend="shard_map", partitioner="nnz"),
+        stop=StopPolicy(target_loss=0.6, max_seconds=12.5, max_rounds=3),
+        name="rt-stop",
+    )
+    restored = ExperimentSpec.from_json(spec.to_json())
+    assert restored == spec
+    assert restored.mesh.partitioner == "nnz"
+    assert restored.stop == StopPolicy(target_loss=0.6, max_seconds=12.5, max_rounds=3)
+    assert restored.content_hash() == spec.content_hash()
+    # old spec JSON (no "stop" key) still loads, with the trivial policy
+    d = spec.to_dict()
+    del d["stop"]
+    assert ExperimentSpec.from_dict(d).stop.trivial
+    # the hash keys on content: any field change moves it
+    assert (
+        dataclasses.replace(spec, stop=StopPolicy()).content_hash()
+        != spec.content_hash()
+    )
 
 
 # ---------------- plan: cost-model parity + autotune ----------------
