@@ -1,0 +1,14 @@
+"""Objective-sweep benchmark — its own driver entry so the table11
+time-to-loss run isn't doubled.
+
+    PYTHONPATH=src:. python -m benchmarks.run --only objectives
+
+Sweeps the registered convex objectives (± L2) through one hybrid
+operating point on the repro.api front door and persists
+``BENCH_objectives.json`` (the objective-parity CI job uploads it as an
+artifact, so per-objective convergence/wall trends are trackable).
+"""
+
+from __future__ import annotations
+
+from benchmarks.bench_time_to_loss import run_objectives as run  # noqa: F401

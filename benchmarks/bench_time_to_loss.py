@@ -26,9 +26,11 @@ from benchmarks.common import emit
 from repro.api import ExperimentSpec, MeshSpec, StopPolicy
 from repro.api import run as api_run
 from repro.core import ParallelSGDSchedule
+from repro.core.objective import OBJECTIVES
 
 ETA = 1.0
 OUT_JSON = Path("BENCH_time_to_loss.json")
+OUT_OBJECTIVES_JSON = Path("BENCH_objectives.json")
 
 
 def _run_to_target(spec: ExperimentSpec):
@@ -54,6 +56,45 @@ def _run_to_target(spec: ExperimentSpec):
         "hit": hit,
     }
     return rep.solve_time_s, rep.rounds_completed, loss, hit, record
+
+
+def run_objectives(rounds: int = 20) -> None:
+    """Sweep the registered convex objectives (± L2) through one hybrid
+    operating point on the front door — rounds-to-loss and wall split
+    per objective, persisted to ``BENCH_objectives.json`` (a CI
+    artifact: objective-layer perf/convergence trends over time)."""
+    s, b, tau, p_r = 2, 8, 8, 2
+    records = []
+    for obj in sorted(OBJECTIVES):
+        for l2 in (0.0, 1e-3):
+            spec = ExperimentSpec(
+                dataset="rcv1-sm",
+                schedule=ParallelSGDSchedule.hybrid(
+                    p_r, s, b, 0.5, tau, rounds=rounds, loss_every=rounds // 4,
+                    gram="dense",
+                ),
+                mesh=MeshSpec(p_r=p_r),
+                row_multiple=s * b,
+                objective=obj,
+                l2=l2,
+                name=f"objectives/{obj}/l2={l2:g}",
+            )
+            rep = api_run(spec)
+            records.append({
+                "objective": obj,
+                "l2": l2,
+                "dataset": spec.dataset,
+                "rounds": rep.rounds_completed,
+                "final_loss": rep.final_loss,
+                "losses": [float(v) for v in rep.losses],
+                "wall_time_s": rep.wall_time_s,
+                "compile_time_s": rep.compile_time_s,
+                "solve_time_s": rep.solve_time_s,
+            })
+            emit(f"objectives/{obj}/l2={l2:g}", rep.solve_time_s * 1e6,
+                 f"final_loss={rep.final_loss:.4f}")
+    OUT_OBJECTIVES_JSON.write_text(json.dumps(records, indent=2))
+    print(f"# wrote {OUT_OBJECTIVES_JSON} ({len(records)} record(s))")
 
 
 def run() -> None:

@@ -16,6 +16,7 @@ MODULES = {
     "table5+7+fig4": "benchmarks.bench_costmodel",
     "table9": "benchmarks.bench_partitioners",
     "table11": "benchmarks.bench_time_to_loss",
+    "objectives": "benchmarks.bench_objectives",
     "fig3": "benchmarks.bench_skew_sweep",
     "fig5": "benchmarks.bench_mesh_sweep",
     "kernels": "benchmarks.bench_kernels",

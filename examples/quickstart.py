@@ -5,14 +5,20 @@ One ``ExperimentSpec`` describes a run of the (p_r, p_c, s, τ) family;
 ``repro.api.plan`` prices it with the paper's cost model (Eq. 4) and
 ``repro.api.run`` executes it on the declared backend. The paper's four
 algorithms are just four schedules — the corner identities fall out.
+The convex loss is a spec field too: the same four corners run
+unchanged under any registered objective.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --objective squared_hinge --l2 1e-3
 """
+
+import argparse
 
 import numpy as np
 
 from repro.api import ExperimentSpec, MeshSpec, plan, run
 from repro.core import ParallelSGDSchedule
+from repro.core.objective import OBJECTIVES
 from repro.costmodel import PERLMUTTER, TPU_V5E, grid_search_config, topology_rule
 from repro.sparse.partition import PARTITIONERS, partition_columns, partition_stats
 from repro.sparse.synthetic import make_dataset
@@ -20,16 +26,27 @@ from repro.sparse.synthetic import make_dataset
 ETA, B, S, TAU = 0.05, 8, 4, 16
 DATASET = "rcv1-sm"
 RM = S * B  # one row padding for every corner → identical sample sequences
+OBJECTIVE, L2 = "logistic", 0.0  # overridden by --objective / --l2
 
 
 def corner(schedule, p_r=1, name=""):
     return ExperimentSpec(
         dataset=DATASET, schedule=schedule, mesh=MeshSpec(p_r=p_r),
-        row_multiple=RM, name=name,
+        row_multiple=RM, objective=OBJECTIVE, l2=L2, name=name,
     )
 
 
 def main() -> None:
+    global OBJECTIVE, L2
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--objective", default="logistic", choices=sorted(OBJECTIVES),
+                    help="convex loss every corner runs (repro.core.objective)")
+    ap.add_argument("--l2", type=float, default=0.0, help="ridge coefficient λ")
+    args = ap.parse_args()
+    OBJECTIVE, L2 = args.objective, args.l2
+    if OBJECTIVE != "logistic" or L2:
+        print(f"objective {OBJECTIVE} (l2={L2:g})")
+
     ds = make_dataset(DATASET, seed=0)
     a = ds.A
     print(f"dataset {ds.name}: m={a.m} n={a.n} z̄={a.zbar:.0f}")

@@ -29,10 +29,15 @@ def to_target(results, name, spec, target):
 
 
 def main() -> None:
+    from repro.core.objective import OBJECTIVES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="url-sm")
     ap.add_argument("--target", type=float, default=0.675)
     ap.add_argument("--max-rounds", type=int, default=60)
+    ap.add_argument("--objective", default="logistic", choices=sorted(OBJECTIVES),
+                    help="convex loss (pick --target to match its scale)")
+    ap.add_argument("--l2", type=float, default=0.0, help="ridge coefficient λ")
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset, seed=0)
@@ -56,7 +61,8 @@ def main() -> None:
     # interpret mode serializes off-TPU (kernel timings: bench_kernels).
     def spec(schedule, p_r_=1, name=""):
         return ExperimentSpec(dataset=args.dataset, schedule=schedule,
-                              mesh=MeshSpec(p_r=p_r_), row_multiple=s * b, name=name)
+                              mesh=MeshSpec(p_r=p_r_), row_multiple=s * b,
+                              objective=args.objective, l2=args.l2, name=name)
 
     to_target(results, "sgd",
               spec(ParallelSGDSchedule.mb_sgd(b, ETA, R * tau, loss_every=tau)),

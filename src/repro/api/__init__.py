@@ -12,7 +12,9 @@ loop over it honoring the spec's ``StopPolicy`` (target_loss /
 max_seconds / max_rounds), and ``sweep`` drives many specs with a
 shared dataset cache and interrupt/resume. The same spec runs on either
 backend ("simulated" engine oracle or the "shard_map" 2D device mesh)
-and returns the same ``RunReport``; specs JSON round-trip for
+and returns the same ``RunReport``; the convex loss is a spec field
+(``objective`` + ``l2``, repro.core.objective — logistic default,
+squared-hinge SVM, least squares); specs JSON round-trip for
 reproducible configs (``python -m repro.launch.sweep --spec
 spec.json``). See docs/api.md.
 """

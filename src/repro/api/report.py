@@ -81,6 +81,11 @@ class RunReport:
 
     def summary(self) -> str:
         sched = self.spec.schedule
+        obj = ""
+        if self.spec.objective != "logistic" or self.spec.l2:
+            obj = f" obj={self.spec.objective}" + (
+                f"+l2={self.spec.l2:g}" if self.spec.l2 else ""
+            )
         trace = f", trace[{len(self.losses)}]" if len(self.losses) else ""
         stopped = (
             f" (stopped: {self.stop_reason} @ round {self.rounds_completed})"
@@ -88,7 +93,7 @@ class RunReport:
             else ""
         )
         return (
-            f"{self.spec.name or self.spec.dataset} [{self.backend}] "
+            f"{self.spec.name or self.spec.dataset} [{self.backend}]{obj} "
             f"s={sched.s} b={sched.b} τ={sched.tau} p_r×p_c="
             f"{self.spec.mesh.p_r}×{self.spec.mesh.p_c}: loss {self.final_loss:.4f} "
             f"in {self.wall_time_s:.2f}s{trace}{stopped}; modeled comm "

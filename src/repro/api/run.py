@@ -35,7 +35,8 @@ from repro.api.report import RunReport
 from repro.api.spec import ExperimentSpec
 from repro.core.distributed import Hybrid2DProblem, build_2d_problem
 from repro.sparse.partition import ColumnPartition
-from repro.core.problem import LogisticProblem, make_problem
+from repro.core.objective import get_objective
+from repro.core.problem import Problem, make_problem
 from repro.core.teams import TeamProblem, stack_row_teams
 from repro.sparse.synthetic import SyntheticDataset, make_dataset
 
@@ -50,7 +51,7 @@ class ProblemBundle:
 
     spec: ExperimentSpec
     dataset: SyntheticDataset
-    global_problem: LogisticProblem
+    global_problem: Problem
     row_multiple: int
     team: TeamProblem | None = None
     prob2d: Hybrid2DProblem | None = None
@@ -77,17 +78,23 @@ def _cached_dataset(name: str, seed: int = 0) -> SyntheticDataset:
 def build_problem(spec: ExperimentSpec) -> ProblemBundle:
     """Materialize the dataset and partition it for the spec's backend.
     Row padding is ``spec.row_multiple`` (default s·b) on both paths so
-    simulated and distributed sample sequences agree."""
+    simulated and distributed sample sequences agree; the spec's
+    objective (+ l2) rides on every problem object, so both executors
+    and the loss probes read the same convex loss."""
     sched, mesh = spec.schedule, spec.mesh
     ds = _cached_dataset(spec.dataset, seed=spec.seed)
     rm = spec.row_multiple or sched.s * sched.b
-    gp = make_problem(ds.A, ds.y, row_multiple=rm)
+    obj = get_objective(spec.objective, l2=spec.l2)
+    gp = make_problem(ds.A, ds.y, row_multiple=rm, objective=obj)
     bundle = ProblemBundle(spec=spec, dataset=ds, global_problem=gp, row_multiple=rm)
     if mesh.backend == "simulated":
-        bundle.team = stack_row_teams(ds.A, ds.y, mesh.p_r, row_multiple=rm)
+        bundle.team = stack_row_teams(
+            ds.A, ds.y, mesh.p_r, row_multiple=rm, objective=obj
+        )
     else:
         bundle.prob2d, bundle.cp = build_2d_problem(
-            ds.A, ds.y, mesh.p_r, mesh.p_c, mesh.partitioner, row_multiple=rm
+            ds.A, ds.y, mesh.p_r, mesh.p_c, mesh.partitioner, row_multiple=rm,
+            objective=obj,
         )
     return bundle
 

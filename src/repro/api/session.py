@@ -43,7 +43,7 @@ from repro.api.report import RunReport, modeled_comm_words
 from repro.api.spec import ExperimentSpec
 from repro.core.engine import engine_loss, run_engine_chunk
 from repro.core.distributed import HybridDriver
-from repro.core.problem import full_loss
+from repro.core.problem import problem_loss
 from repro.core.teams import global_problem
 from repro.train.checkpoint import (
     load_session_checkpoint,
@@ -272,7 +272,7 @@ class Session:
     def report(self) -> RunReport:
         """The uniform ``RunReport`` for the rounds completed so far."""
         x = self.current_x()
-        final_loss = float(full_loss(self.bundle.global_problem, jnp.asarray(x)))
+        final_loss = float(problem_loss(self.bundle.global_problem, jnp.asarray(x)))
         return RunReport(
             spec=self.spec,
             plan=self._plan,

@@ -23,8 +23,10 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 
 from repro.core.engine import ParallelSGDSchedule
+from repro.core.objective import OBJECTIVES
 from repro.costmodel.machines import MACHINES
 from repro.sparse.partition import PARTITIONERS
 from repro.sparse.synthetic import dataset_stats
@@ -127,6 +129,13 @@ class ExperimentSpec:
                  -sm variants materialize on one host.
     schedule     the (s, b, τ, η, rounds, loss_every, gram) knobs —
                  the exact object both backends execute.
+    objective    registered convex loss (repro.core.objective):
+                 "logistic" (default) | "squared_hinge" |
+                 "least_squares". Flows into the problem build on both
+                 backends; the default reproduces pre-objective traces
+                 bitwise.
+    l2           ridge coefficient λ ≥ 0 (0 = unregularized; exact on
+                 s > 1 via the decay-aware correction recurrence).
     mesh         geometry + backend (authoritative for p_r, p_c).
     machine      cost-model machine name (repro.costmodel.MACHINES)
                  used by ``plan``.
@@ -150,12 +159,20 @@ class ExperimentSpec:
     autotune: bool = False
     row_multiple: int | None = None
     stop: StopPolicy = dataclasses.field(default_factory=StopPolicy)
+    objective: str = "logistic"
+    l2: float = 0.0
     name: str = ""
 
     def __post_init__(self):
         dataset_stats(self.dataset)  # raises on unknown name
         if self.machine not in MACHINES:
             raise ValueError(f"machine={self.machine!r} not in {sorted(MACHINES)}")
+        if self.objective not in OBJECTIVES:
+            raise ValueError(
+                f"objective={self.objective!r} not in {sorted(OBJECTIVES)}"
+            )
+        if not math.isfinite(self.l2) or self.l2 < 0.0:
+            raise ValueError(f"l2={self.l2} must be finite and ≥ 0")
         if self.stop.target_loss is not None and not self.schedule.loss_every:
             raise ValueError(
                 "stop.target_loss needs schedule.loss_every > 0: the objective is "
@@ -180,7 +197,7 @@ class ExperimentSpec:
     # ---- JSON round-tripping ----
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "name": self.name,
             "dataset": self.dataset,
             "seed": self.seed,
@@ -191,6 +208,16 @@ class ExperimentSpec:
             "mesh": self.mesh.to_dict(),
             "stop": self.stop.to_dict(),
         }
+        # objective/l2 are emitted only when non-default: a
+        # default-logistic spec serializes (and content-hashes) exactly
+        # as it did before the objective layer existed, so pre-existing
+        # checkpoints and sweep resume dirs stay valid — the default
+        # run is bitwise-identical, and its hash says so.
+        if self.objective != "logistic":
+            d["objective"] = self.objective
+        if self.l2:
+            d["l2"] = self.l2
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ExperimentSpec":

@@ -33,7 +33,23 @@ plans a spec with the cost model and dispatches it to either the
 simulated engine or the shard_map executor.
 """
 
-from repro.core.problem import LogisticProblem, full_loss, make_problem, sigmoid_residual
+from repro.core.objective import (
+    LOGISTIC,
+    OBJECTIVES,
+    LeastSquaresObjective,
+    LogisticObjective,
+    Objective,
+    SquaredHingeObjective,
+    get_objective,
+)
+from repro.core.problem import (
+    LogisticProblem,  # deprecated alias of Problem
+    Problem,
+    full_loss,  # deprecated: use problem_loss
+    make_problem,
+    problem_loss,
+    sigmoid_residual,  # deprecated: use LOGISTIC.residual
+)
 from repro.core.engine import (
     ParallelSGDSchedule,
     bundle_gram_v,
@@ -58,6 +74,15 @@ from repro.core.distributed import (
 )
 
 __all__ = [
+    "LOGISTIC",
+    "OBJECTIVES",
+    "Objective",
+    "LogisticObjective",
+    "SquaredHingeObjective",
+    "LeastSquaresObjective",
+    "get_objective",
+    "Problem",
+    "problem_loss",
     "LogisticProblem",
     "full_loss",
     "make_problem",

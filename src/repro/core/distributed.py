@@ -36,7 +36,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.engine import ParallelSGDSchedule, bundle_gram_v, inner_corrections
-from repro.core.problem import LogisticProblem, full_loss
+from repro.core.objective import LOGISTIC, Objective, get_objective
+from repro.core.problem import Problem, problem_loss
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.ell import EllBlock, ell_rmatvec
 from repro.sparse.partition import ColumnPartition, partition_columns, partition_rows
@@ -61,6 +62,9 @@ class Hybrid2DProblem:
     m: int = dataclasses.field(metadata=dict(static=True))
     n: int = dataclasses.field(metadata=dict(static=True))
     n_loc: int = dataclasses.field(metadata=dict(static=True))
+    objective: Objective = dataclasses.field(
+        default=LOGISTIC, metadata=dict(static=True)
+    )
 
     @property
     def rows_local(self) -> int:
@@ -79,10 +83,12 @@ def build_2d_problem(
     partitioner: str,
     row_multiple: int = 1,
     dtype=jnp.float32,
+    objective: str | Objective = LOGISTIC,
 ) -> tuple[Hybrid2DProblem, ColumnPartition]:
     """Partition (A, y) onto the p_r × p_c mesh. Row bounds match
     repro.core.teams.stack_row_teams so simulated and distributed
-    sample sequences agree."""
+    sample sequences agree; ``objective`` is the shared convex loss."""
+    obj = get_objective(objective)
     ya = a.scale_rows(np.asarray(y, dtype=np.float64))
     cp = partition_columns(a, p_c, partitioner)
     rb = partition_rows(a.m, p_r)
@@ -119,6 +125,7 @@ def build_2d_problem(
         m=a.m,
         n=a.n,
         n_loc=n_loc,
+        objective=obj,
     )
     return prob, cp
 
@@ -219,10 +226,14 @@ def make_hybrid_step(
             f"mesh {dict(mesh.shape)} does not match problem layout "
             f"{prob.p_r}×{prob.p_c}"
         )
+    if sched.eta <= 0:
+        raise ValueError(f"eta={sched.eta} must be > 0 to run the solver")
     s, b_, eta_ = sched.s, sched.b, sched.eta
     sb = s * b_
     n_loc = prob.n_loc
     bundles = sched.tau // s
+    objective = prob.objective
+    lam = objective.l2
     # "pallas" is the simulated engine's default; inside shard_map the
     # same math runs on the blocked panel-streaming path (shard_map-safe
     # everywhere, incl. CPU interpret containers).
@@ -246,10 +257,19 @@ def make_hybrid_step(
             g_part, v_part = bundle_gram_v(bi, bv, x_loc, n_loc, gram=gram_, bk=bk_)
             g = jax.lax.psum(g_part, "cols")
             v = jax.lax.psum(v_part, "cols")
-            u = inner_corrections(g, v, s, b_, eta_)
+            u = inner_corrections(g, v, s, b_, eta_, objective)
             # Yᵀu stays local under column partitioning
             blk = EllBlock(indices=bi, values=bv, n=n_loc)
-            return x_loc + (eta_ / b_) * ell_rmatvec(blk, u).astype(x_loc.dtype), None
+            if lam == 0.0:
+                return x_loc + (eta_ / b_) * ell_rmatvec(blk, u).astype(x_loc.dtype), None
+            # decay-folded update, exact under column sharding: the
+            # L2 decay is elementwise, so each shard decays its own
+            # slice (padded slots stay zero: ρ·0 + 0).
+            rho_s = jnp.asarray(1.0 - eta_ * lam, x_loc.dtype) ** s
+            return (
+                rho_s * x_loc + (eta_ / b_) * ell_rmatvec(blk, u).astype(x_loc.dtype),
+                None,
+            )
 
         x_loc, _ = jax.lax.scan(bundle, x_loc, jnp.arange(bundles))
         # column Allreduce: FedAvg averaging across row teams (n/p_c
@@ -293,7 +313,7 @@ class HybridDriver:
         cp: ColumnPartition,
         x0: np.ndarray,
         sched: ParallelSGDSchedule,
-        loss_problem: LogisticProblem | None = None,
+        loss_problem: Problem | None = None,
         rounds_done: int = 0,
     ):
         self.prob = prob
@@ -331,10 +351,11 @@ class HybridDriver:
         )
 
     def loss(self) -> float:
-        """Full global objective at the current iterate."""
+        """Full global objective (under ``loss_problem``'s objective)
+        at the current iterate."""
         if self.loss_problem is None:
             raise ValueError("HybridDriver was built without loss_problem")
-        return float(full_loss(self.loss_problem, jnp.asarray(self.gather())))
+        return float(problem_loss(self.loss_problem, jnp.asarray(self.gather())))
 
 
 def run_hybrid_distributed(
@@ -350,7 +371,7 @@ def run_hybrid_distributed(
     gram: str | None = None,
     *,
     s: int | None = None,
-    loss_problem: LogisticProblem | None = None,
+    loss_problem: Problem | None = None,
 ):
     """Driver: place data once, run ``sched.rounds`` rounds, gather x.
 
@@ -381,7 +402,7 @@ def run_hybrid_distributed(
             "run_hybrid_distributed", s=s, b=b, eta=eta, tau=tau, rounds=rounds, gram=gram
         )
     if sched.loss_every and loss_problem is None:
-        raise ValueError("loss_every > 0 needs loss_problem (the global LogisticProblem)")
+        raise ValueError("loss_every > 0 needs loss_problem (the global Problem)")
 
     driver = HybridDriver(mesh, prob, cp, x0, sched, loss_problem=loss_problem)
     losses = []

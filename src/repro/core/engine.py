@@ -25,6 +25,12 @@ scatter-free Pallas ELL-Gram kernel (repro.kernels.ell_gram) — the old
 per-bundle densify into a (sb × n) scratch matrix survives only as the
 parity oracle in repro.kernels.ref.
 
+The *loss* is pluggable (repro.core.objective): the engine reads the
+residual map u(z) = -ℓ′(z), the pointwise loss, and the optional L2
+decay from the problem's ``objective`` — the logistic default routes
+through bitwise the same computation as the pre-objective engine, and
+λ > 0 is exact via the decay-aware correction recurrence.
+
 repro.core.{sgd,sstep,fedavg,hybrid} re-export configured engine calls
 for backwards compatibility.
 """
@@ -37,7 +43,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import LogisticProblem, full_loss, sigmoid_residual
+from repro.core.objective import LOGISTIC, Objective
+from repro.core.problem import Problem, problem_loss
 from repro.core.teams import TeamProblem, global_problem
 from repro.kernels.ell_gram import ell_gram_and_v, ell_gram_and_v_blocked
 from repro.kernels.ref import ell_gram_and_v_ref
@@ -87,6 +94,17 @@ class ParallelSGDSchedule:
         # NOTE: s | τ is required by the *solver* (checked in
         # run_parallel_sgd), not here: the NN trainer reuses this object
         # with s = grad-accum microsteps, where the coupling is absent.
+        # Likewise η > 0 is a solver-entry check (run_parallel_sgd /
+        # make_hybrid_step): the engine internally normalizes schedules
+        # to η = 0 for jit-cache keying, so only η < 0 is nonsense here.
+        for knob in ("p_r", "s", "b", "tau", "rounds", "bk", "p_c"):
+            v = getattr(self, knob)
+            if v < 1:
+                raise ValueError(f"{knob}={v!r} must be a positive integer")
+        if self.loss_every < 0:
+            raise ValueError(f"loss_every={self.loss_every} must be ≥ 0")
+        if self.eta < 0:
+            raise ValueError(f"eta={self.eta} must be ≥ 0")
         if self.loss_every and self.rounds % self.loss_every:
             raise ValueError(
                 f"rounds={self.rounds} must be divisible by loss_every={self.loss_every}"
@@ -157,33 +175,71 @@ def bundle_gram_v(
     raise ValueError(f"gram={gram!r} not in {GRAM_METHODS}")
 
 
-def inner_corrections(g, v, s: int, b: int, eta: float) -> jnp.ndarray:
-    """Algorithm 3 lines 9-14: the s deferred-update corrections.
+def inner_corrections(
+    g, v, s: int, b: int, eta: float, objective: Objective = LOGISTIC
+) -> jnp.ndarray:
+    """Algorithm 3 lines 9-14: the s deferred-update corrections under
+    any registered objective.
 
-    u_j = sigmoid_residual(v_j + (η/b) Σ_{l<j} G_{jl} u_l); G is
-    strictly lower so in-block terms multiply zeros. Shared by the
-    engine and the shard_map path (and mirrored VMEM-resident by
-    repro.kernels.sstep_inner)."""
+    Unregularized (objective.l2 == 0 — special-cased at trace time so
+    the default path is bitwise-unchanged):
 
-    def inner(u_acc, j):
-        zj = jax.lax.dynamic_slice_in_dim(v, j * b, b) + (eta / b) * (
+        u_j = residual(v_j + (η/b) Σ_{l<j} G_{jl} u_l)
+
+    G is strictly lower so in-block terms multiply zeros. With L2 decay
+    λ > 0 and ρ = 1 - ηλ the exact unrolled recurrence is
+
+        z_j = ρ^j·v_j + (η/b) Σ_{l<j} ρ^{j-1-l}·G_{jl}·u_l
+
+    implemented by carrying the ρ-rescaled residual vector: after step
+    j the carry holds [ρ^{j-l}·u_l]_{l≤j}, so the returned vector is
+    exactly the ρ^{s-1-l}-weighted u the caller's Yᵀ apply (and ρ^s·x
+    decay-fold) needs. Shared by the engine and the shard_map path (and
+    mirrored VMEM-resident by repro.kernels.sstep_inner for the
+    logistic default)."""
+    lam = objective.l2
+
+    if lam == 0.0:
+
+        def inner(u_acc, j):
+            zj = jax.lax.dynamic_slice_in_dim(v, j * b, b) + (eta / b) * (
+                jax.lax.dynamic_slice_in_dim(g, j * b, b, axis=0) @ u_acc
+            )
+            uj = objective.residual(zj)
+            return jax.lax.dynamic_update_slice_in_dim(u_acc, uj, j * b, axis=0), None
+
+        u, _ = jax.lax.scan(inner, jnp.zeros(s * b, v.dtype), jnp.arange(s))
+        return u
+
+    rho = jnp.asarray(1.0 - eta * lam, v.dtype)
+
+    def inner_decay(carry, j):
+        u_acc, rho_j = carry  # u_acc_l = ρ^{j-1-l}·u_l (l < j); rho_j = ρ^j
+        zj = rho_j * jax.lax.dynamic_slice_in_dim(v, j * b, b) + (eta / b) * (
             jax.lax.dynamic_slice_in_dim(g, j * b, b, axis=0) @ u_acc
         )
-        uj = sigmoid_residual(zj)
-        return jax.lax.dynamic_update_slice_in_dim(u_acc, uj, j * b, axis=0), None
+        uj = objective.residual(zj)
+        u_acc = jax.lax.dynamic_update_slice_in_dim(rho * u_acc, uj, j * b, axis=0)
+        return (u_acc, rho_j * rho), None
 
-    u, _ = jax.lax.scan(inner, jnp.zeros(s * b, v.dtype), jnp.arange(s))
+    carry0 = (jnp.zeros(s * b, v.dtype), jnp.ones((), v.dtype))
+    (u, _), _ = jax.lax.scan(inner_decay, carry0, jnp.arange(s))
     return u
 
 
 def _team_inner_iterations(indices, values, n: int, x, round_idx, eta,
-                           sched: ParallelSGDSchedule):
+                           sched: ParallelSGDSchedule,
+                           objective: Objective = LOGISTIC):
     """τ inner iterations (= τ/s s-bundles) on one row team's ELL rows.
-    ``eta`` is a traced scalar (sweep-friendly: no recompile per value)."""
+    ``eta`` is a traced scalar (sweep-friendly: no recompile per value);
+    ``objective`` supplies the residual and (when l2 > 0) the decay
+    fold — exact on every corner, since the s-bundle recurrence in
+    ``inner_corrections`` is decay-aware."""
     m_local = indices.shape[0]
     bundles = sched.tau // sched.s
     s, b = sched.s, sched.b
     sb = s * b
+    lam = objective.l2
 
     def bundle_step(x, t):
         k0 = round_idx * bundles + t
@@ -195,12 +251,18 @@ def _team_inner_iterations(indices, values, n: int, x, round_idx, eta,
             # FedAvg/MB-SGD corner: the Gram is empty (no deferred
             # updates to correct) — one SpMV + one SpMVᵀ, exactly
             # Algorithm 2's local step.
-            u = sigmoid_residual(ell_matvec(bundle, x))
+            u = objective.residual(ell_matvec(bundle, x))
         else:
             g, v = bundle_gram_v(idx, val, x, n, gram=sched.gram, bk=sched.bk,
                                  interpret=sched.interpret)
-            u = inner_corrections(g, v, s, b, eta)
-        return x + (eta / b) * ell_rmatvec(bundle, u).astype(x.dtype), None
+            u = inner_corrections(g, v, s, b, eta, objective)
+        if lam == 0.0:
+            return x + (eta / b) * ell_rmatvec(bundle, u).astype(x.dtype), None
+        # decay-folded update: x_s = ρ^s·x + (η/b)·Yᵀ·[ρ^{s-1-l}·u_l]
+        # (inner_corrections already returns the ρ-weighted u; for
+        # s = 1 the weight is ρ^0 = 1). Exact on the s = 1 corners.
+        rho_s = jnp.asarray(1.0 - eta * lam, x.dtype) ** s
+        return rho_s * x + (eta / b) * ell_rmatvec(bundle, u).astype(x.dtype), None
 
     x, _ = jax.lax.scan(bundle_step, x, jnp.arange(bundles))
     return x
@@ -214,7 +276,7 @@ def _one_round(tp, x, r, eta, sched):
 
     def team(args):
         idx, val = args
-        return _team_inner_iterations(idx, val, tp.n, x, r, eta, sched)
+        return _team_inner_iterations(idx, val, tp.n, x, r, eta, sched, tp.objective)
 
     if sched.s == 1:
         # FedAvg/MB-SGD corner: per-team working set is one (b, w)
@@ -239,7 +301,7 @@ def _run_engine(tp, x0, eta, sched):
 
     def outer(x, c):
         x, _ = jax.lax.scan(one_round, x, c * chunk + jnp.arange(chunk))
-        return x, full_loss(gp, x)
+        return x, problem_loss(gp, x)
 
     x, losses = jax.lax.scan(outer, x0, jnp.arange(n_chunks))
     if not sched.loss_every:
@@ -281,9 +343,9 @@ def _engine_chunk(tp, x, r0, eta, sched, k):
 
 @jax.jit
 def engine_loss(gp, x):
-    """The session's loss probe — same ``full_loss`` the monolithic
-    scan samples at chunk boundaries."""
-    return full_loss(gp, x)
+    """The session's loss probe — same ``problem_loss`` (under ``gp``'s
+    objective) the monolithic scan samples at chunk boundaries."""
+    return problem_loss(gp, x)
 
 
 def run_engine_chunk(
@@ -300,6 +362,8 @@ def run_engine_chunk(
     — calling it with offsets 0, k, 2k, … reproduces
     ``run_parallel_sgd``'s iterate sequence bitwise, because both paths
     scan the same ``_one_round`` body over the same round indices."""
+    if sched.eta <= 0:
+        raise ValueError(f"eta={sched.eta} must be > 0 to run the solver")
     eta = jnp.asarray(sched.eta, x.dtype)
     return _engine_chunk(
         tp, x, jnp.int32(round_offset), eta, _normalize_for_chunk(sched), int(k)
@@ -322,6 +386,8 @@ def run_parallel_sgd(
     η enters the compiled computation as a traced operand, so an
     η-sweep over otherwise-identical schedules reuses one executable.
     """
+    if sched.eta <= 0:
+        raise ValueError(f"eta={sched.eta} must be > 0 to run the solver")
     if sched.tau % sched.s:
         raise ValueError(
             f"tau={sched.tau} must be divisible by s={sched.s} (paper requires s ≤ τ)"
@@ -336,8 +402,9 @@ def run_parallel_sgd(
     return _run_engine(tp, x0, eta, dataclasses.replace(sched, eta=0.0))
 
 
-def single_team(problem: LogisticProblem) -> TeamProblem:
-    """View a LogisticProblem as a 1-team TeamProblem (p_r = 1 corners)."""
+def single_team(problem: Problem) -> TeamProblem:
+    """View a Problem as a 1-team TeamProblem (p_r = 1 corners); the
+    objective rides along."""
     return TeamProblem(
         indices=problem.ya.indices[None],
         values=problem.ya.values[None],
@@ -345,4 +412,5 @@ def single_team(problem: LogisticProblem) -> TeamProblem:
         p=1,
         m=problem.m,
         n=problem.n,
+        objective=problem.objective,
     )

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import ParallelSGDSchedule, run_parallel_sgd
-from repro.core.problem import sigmoid_residual
+from repro.core.objective import LOGISTIC
 from repro.core.teams import TeamProblem
 from repro.sparse.ell import EllBlock, ell_matvec, ell_rmatvec
 
@@ -33,7 +33,7 @@ def _local_sgd(indices, values, n: int, x, k0, tau: int, b: int, eta: float):
         idx = jax.lax.dynamic_slice_in_dim(indices, start, b, axis=0)
         val = jax.lax.dynamic_slice_in_dim(values, start, b, axis=0)
         batch = EllBlock(indices=idx, values=val, n=n)
-        u = sigmoid_residual(ell_matvec(batch, x))
+        u = LOGISTIC.residual(ell_matvec(batch, x))
         return x + (eta / b) * ell_rmatvec(batch, u), None
 
     x, _ = jax.lax.scan(body, x, jnp.arange(tau))

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import ParallelSGDSchedule, run_parallel_sgd, single_team
-from repro.core.problem import LogisticProblem, sigmoid_residual
+from repro.core.objective import LOGISTIC
+from repro.core.problem import Problem
 from repro.sparse.ell import EllBlock, ell_matvec, ell_rmatvec
 
 
@@ -33,13 +34,13 @@ def sgd_step(ell: EllBlock, x: jnp.ndarray, k: jnp.ndarray, b: int, eta: float) 
     """One mini-batch SGD step (Algorithm 1 lines 3-6)."""
     batch = batch_rows(ell, k, b)
     z = ell_matvec(batch, x)  # S·diag(y)·A·x
-    u = sigmoid_residual(z)  # 1/(1+exp(z))
+    u = LOGISTIC.residual(z)  # 1/(1+exp(z))
     # g = -(1/b) (S diag(y) A)^T u  ⇒  x ← x + (η/b) Yᵀu
     return x + (eta / b) * ell_rmatvec(batch, u)
 
 
 def run_sgd(
-    problem: LogisticProblem,
+    problem: Problem,
     x0: jnp.ndarray,
     b: int,
     eta: float,

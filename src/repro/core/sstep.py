@@ -40,7 +40,7 @@ from repro.core.engine import (
     run_parallel_sgd,
     single_team,
 )
-from repro.core.problem import LogisticProblem
+from repro.core.problem import Problem
 from repro.core.sgd import batch_rows
 from repro.sparse.ell import EllBlock, ell_rmatvec
 
@@ -71,7 +71,7 @@ def sstep_bundle(
 
 
 def run_sstep_sgd(
-    problem: LogisticProblem,
+    problem: Problem,
     x0: jnp.ndarray,
     s: int,
     b: int,

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.problem import LogisticProblem
+from repro.core.objective import LOGISTIC, Objective, get_objective
+from repro.core.problem import Problem
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.ell import EllBlock
 from repro.sparse.partition import partition_rows
@@ -25,7 +26,8 @@ from repro.sparse.partition import partition_rows
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class TeamProblem:
-    """p stacked local problems. indices/values: (p, rows_local, width)."""
+    """p stacked local problems. indices/values: (p, rows_local, width).
+    ``objective`` (static) is the shared convex loss every team runs."""
 
     indices: jnp.ndarray
     values: jnp.ndarray
@@ -33,6 +35,9 @@ class TeamProblem:
     p: int = dataclasses.field(metadata=dict(static=True))
     m: int = dataclasses.field(metadata=dict(static=True))  # global true samples
     n: int = dataclasses.field(metadata=dict(static=True))
+    objective: Objective = dataclasses.field(
+        default=LOGISTIC, metadata=dict(static=True)
+    )
 
     @property
     def rows_local(self) -> int:
@@ -43,8 +48,10 @@ class TeamProblem:
 
 
 def stack_row_teams(
-    a: CSRMatrix, y: np.ndarray, p: int, row_multiple: int = 1, dtype=jnp.float32
+    a: CSRMatrix, y: np.ndarray, p: int, row_multiple: int = 1, dtype=jnp.float32,
+    objective: str | Objective = LOGISTIC,
 ) -> TeamProblem:
+    obj = get_objective(objective)
     ya = a.scale_rows(np.asarray(y, dtype=np.float64))
     rb = partition_rows(a.m, p)
     blocks = [ya.row_block(int(rb[i]), int(rb[i + 1])) for i in range(p)]
@@ -69,17 +76,19 @@ def stack_row_teams(
         p=p,
         m=a.m,
         n=a.n,
+        objective=obj,
     )
 
 
-def global_problem(tp: TeamProblem) -> LogisticProblem:
-    """Flatten the stacked teams back into one LogisticProblem (for the
-    full-objective trace)."""
+def global_problem(tp: TeamProblem) -> Problem:
+    """Flatten the stacked teams back into one Problem (for the
+    full-objective trace); the objective rides along."""
     flat_idx = tp.indices.reshape(-1, tp.indices.shape[-1])
     flat_val = tp.values.reshape(-1, tp.values.shape[-1])
-    return LogisticProblem(
+    return Problem(
         ya=EllBlock(indices=flat_idx, values=flat_val, n=tp.n),
         m=tp.m,
         n=tp.n,
         rows_valid=tp.rows_valid.reshape(-1),
+        objective=tp.objective,
     )

@@ -67,14 +67,15 @@ def sstep_inner(
 
 
 def sstep_inner_ref(g, v, s: int, b: int, eta: float) -> jnp.ndarray:
-    """Pure-jnp oracle — the same loop the core solver runs."""
-    from repro.core.problem import sigmoid_residual
+    """Pure-jnp oracle — the same loop the core solver runs (at the
+    logistic default; the VMEM kernel hardcodes the logistic residual)."""
+    from repro.core.objective import LOGISTIC
 
     def inner(u_acc, j):
         zj = jax.lax.dynamic_slice_in_dim(v, j * b, b) + (eta / b) * (
             jax.lax.dynamic_slice_in_dim(g, j * b, b, axis=0) @ u_acc
         )
-        uj = sigmoid_residual(zj)
+        uj = LOGISTIC.residual(zj)
         return jax.lax.dynamic_update_slice_in_dim(u_acc, uj, j * b, axis=0), None
 
     u, _ = jax.lax.scan(inner, jnp.zeros(s * b, v.dtype), jnp.arange(s))

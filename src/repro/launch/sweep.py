@@ -7,6 +7,7 @@ twin of ``repro.launch.train``'s flag-style CLI:
     PYTHONPATH=src python -m repro.launch.sweep --spec sweep.json --out results.json
     PYTHONPATH=src python -m repro.launch.sweep --spec spec.json --plan-only
     PYTHONPATH=src python -m repro.launch.sweep --spec sweep.json --resume ckpt/ --table
+    PYTHONPATH=src python -m repro.launch.sweep --spec spec.json --objective squared_hinge --l2 1e-3
 
 The spec file holds one ``ExperimentSpec`` dict or a list of them (a
 sweep). Each spec is cost-model planned (Eq. 4 breakdown + regime;
@@ -26,10 +27,12 @@ time-to-loss table (§7.5) over the collected reports.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from pathlib import Path
 
 from repro.api import ExperimentSpec, plan, sweep
+from repro.core.objective import OBJECTIVES
 
 
 def load_specs(path: Path) -> list[ExperimentSpec]:
@@ -62,9 +65,24 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--target-loss", type=float, default=None,
                     help="fallback target for --table points without a "
                          "stop.target_loss of their own")
+    ap.add_argument("--objective", default=None, choices=sorted(OBJECTIVES),
+                    help="override every loaded spec's convex objective "
+                         "(repro.core.objective registry)")
+    ap.add_argument("--l2", type=float, default=None, metavar="LAMBDA",
+                    help="override every loaded spec's L2 coefficient")
     args = ap.parse_args(argv)
 
     specs = load_specs(args.spec)
+    override = {}
+    if args.objective is not None:
+        override["objective"] = args.objective
+    if args.l2 is not None:
+        override["l2"] = args.l2
+    if override:
+        # replace() re-validates through __post_init__; the override
+        # also moves each spec's content hash, so --resume dirs never
+        # mix objectives.
+        specs = [dataclasses.replace(s, **override) for s in specs]
     records = []
     for spec in specs:
         pl = plan(spec)

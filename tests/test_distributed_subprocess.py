@@ -123,6 +123,43 @@ def test_front_door_backend_parity(mesh_shape):
     assert "OK" in out
 
 
+def test_front_door_objective_parity_multidevice():
+    """Cross-objective backend parity on a real 2×2 mesh: the spec's
+    objective (+ L2, exercising the decay-aware bundle recurrence under
+    column-sharded psum) must produce the same weights and trace on
+    both executors."""
+    out = run_in_subprocess(
+        """
+        import dataclasses
+        import numpy as np
+        from repro.api import ExperimentSpec, MeshSpec, run
+        from repro.core import ParallelSGDSchedule
+
+        for obj, l2 in (("squared_hinge", 1e-3), ("least_squares", 0.0)):
+            sched = ParallelSGDSchedule.hybrid(2, 2, 4, 0.05, 8, rounds=3,
+                                               loss_every=1)
+            spec = ExperimentSpec(
+                dataset="rcv1-sm",
+                schedule=sched,
+                mesh=MeshSpec(p_r=2, p_c=2, backend="simulated"),
+                objective=obj,
+                l2=l2,
+                name=f"obj-parity-{obj}",
+            )
+            r_sim = run(spec)
+            r_dist = run(dataclasses.replace(
+                spec, mesh=MeshSpec(p_r=2, p_c=2, backend="shard_map")))
+            dx = float(np.abs(r_sim.x - r_dist.x).max())
+            dl = float(np.abs(r_sim.losses - r_dist.losses).max())
+            assert dx < 1e-5, (obj, dx)
+            assert dl < 1e-5, (obj, dl)
+            print("OK", obj, dx, dl)
+        """,
+        devices=4,
+    )
+    assert out.count("OK") == 2
+
+
 def test_session_shard_map_mesh_stream_and_resume(tmp_path):
     """The Session lifecycle on a real 2×4 device mesh: streamed rounds
     match run() bitwise, and a save → restore mid-run (off a loss

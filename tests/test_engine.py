@@ -176,6 +176,37 @@ def test_schedule_validation(dataset):
         ParallelSGDSchedule.fedavg(2, B, ETA, 4, rounds=10, loss_every=4)
 
 
+@pytest.mark.parametrize(
+    "bad",
+    [
+        dict(s=0), dict(s=-2), dict(b=0), dict(b=-8), dict(bk=0), dict(bk=-512),
+        dict(tau=0), dict(p_r=0), dict(p_c=0), dict(rounds=0), dict(rounds=-1),
+        dict(loss_every=-1), dict(eta=-0.05),
+    ],
+)
+def test_schedule_rejects_nonpositive_knobs(bad):
+    """Satellite: every loop-shape knob must be positive (loss_every ≥ 0,
+    eta ≥ 0 — η = 0 is reserved for the engine's internal jit-cache
+    normalization and rejected at the solver entries instead)."""
+    (knob, value), = bad.items()
+    with pytest.raises(ValueError, match=knob):
+        ParallelSGDSchedule(**bad)
+
+
+def test_solver_entries_reject_eta_zero(dataset):
+    """η = 0 passes construction (the chunk cache normalizes to it) but
+    no solver entry may run a zero-step schedule."""
+    from repro.core.engine import run_engine_chunk
+
+    a, y = dataset
+    tp = stack_row_teams(a, y, 1, row_multiple=64)
+    sched = ParallelSGDSchedule(eta=0.0, rounds=1)
+    with pytest.raises(ValueError, match="eta"):
+        run_parallel_sgd(tp, jnp.zeros(tp.n), sched)
+    with pytest.raises(ValueError, match="eta"):
+        run_engine_chunk(tp, jnp.zeros(tp.n), 0, 1, sched)
+
+
 def test_eta_is_traced_not_static(dataset):
     """An η-sweep over otherwise-identical schedules must reuse one
     compiled executable (η enters as a traced operand)."""
