@@ -1,0 +1,114 @@
+"""The measured-vs-modeled communication ledger, per dataset × mesh.
+
+For each (dataset, p_r × p_c) point this benchmark reports the run's
+communication three ways and persists them to ``BENCH_comm.json`` (a CI
+artifact — the counted/modeled identity and measured round walls are
+trackable over time):
+
+  modeled    the Table 2–3 closed form (costmodel.schedule_comm_volume)
+             — what Eq. 4 charges β for;
+  counted    the CommLedger of the run (repro.core.comm): spans and
+             payloads captured from the collectives the round body
+             actually issued;
+  measured   per-round wall seconds from the timed collectives, on the
+             shard_map backend when the process has enough devices for
+             the mesh (run through ``benchmarks.run --only comm`` under
+             XLA_FLAGS=--xla_force_host_platform_device_count=8, as CI
+             does), and on the simulated backend otherwise.
+
+The timed points then close the §6.5 loop in-process: ``calibrate()``
+fits α/β/γ from them and the fitted constants are persisted next to the
+machine presets they replace.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import emit
+from repro.api import ExperimentSpec, MeshSpec, calibrate
+from repro.api import run as api_run
+from repro.core import ParallelSGDSchedule
+from repro.costmodel import MACHINES
+
+OUT_JSON = Path("BENCH_comm.json")
+
+# dataset × mesh grid: the four schedule corners appear as mesh limits
+# (pure row = FedAvg-style sync traffic, pure column = s-step-style Gram
+# traffic, square = both).
+POINTS = [
+    ("rcv1-sm", 1, 1),
+    ("rcv1-sm", 4, 1),
+    ("rcv1-sm", 1, 4),
+    ("rcv1-sm", 2, 2),
+    ("uniform-sm", 2, 2),
+    ("uniform-sm", 2, 4),
+]
+
+
+def _spec(dataset: str, p_r: int, p_c: int, backend: str) -> ExperimentSpec:
+    return ExperimentSpec(
+        dataset=dataset,
+        schedule=ParallelSGDSchedule.hybrid(p_r, 2, 8, 0.05, 8, rounds=4),
+        mesh=MeshSpec(p_r=p_r, p_c=p_c, backend=backend),
+        comm_timing=True,
+        name=f"comm/{dataset}/{p_r}x{p_c}/{backend}",
+    )
+
+
+def run() -> None:
+    records = []
+    timed_reports = []
+    n_dev = jax.device_count()
+    for dataset, p_r, p_c in POINTS:
+        backend = "shard_map" if n_dev >= p_r * p_c else "simulated"
+        rep = api_run(_spec(dataset, p_r, p_c, backend))
+        led = rep.ledger
+        counted = led.counted_words()
+        spr = led.seconds_per_round
+        drift = counted["total_words"] - rep.comm_words["total_words"]
+        emit(
+            f"comm/{dataset}/{p_r}x{p_c}",
+            spr * 1e6,
+            f"backend={backend} modeled={rep.comm_words['total_words']:.0f}w "
+            f"counted={counted['total_words']:.0f}w drift={drift:.0f}w",
+        )
+        timed_reports.append(rep)
+        records.append({
+            "dataset": dataset,
+            "mesh": [p_r, p_c],
+            "backend": backend,
+            "modeled_words": rep.comm_words,
+            "counted_words": counted,
+            "counted_calls": led.counted_calls(),
+            "rates": [r.to_dict() for r in led.rates],
+            "measured_seconds_per_round": spr,
+            "round_seconds": led.round_seconds,
+            "wall_time_s": rep.wall_time_s,
+        })
+
+    # §6.5 in-process: fit constants from the measured points and place
+    # them next to the presets they would replace in plan().
+    cal = calibrate([rep.calibration_point() for rep in timed_reports])
+    machine = MACHINES["perlmutter-cpu"]
+    emit(
+        "comm/calibration",
+        cal.gamma * 1e6,
+        f"alpha={cal.alpha:.3g} beta={cal.beta:.3g} gamma={cal.gamma:.3g} "
+        f"rel_rms={cal.rel_rms:.2f}",
+    )
+    payload = {
+        "points": records,
+        "calibration": cal.to_dict(),
+        "preset": {
+            "machine": machine.name,
+            "alpha_64": machine.alpha(64),
+            "beta_64": machine.beta(64),
+            "gamma_flop_dram": machine.gamma_flop(1 << 30),
+        },
+    }
+    OUT_JSON.write_text(json.dumps(payload, indent=2))
+    print(f"# wrote {OUT_JSON} ({len(records)} points)")

@@ -17,6 +17,7 @@ MODULES = {
     "table9": "benchmarks.bench_partitioners",
     "table11": "benchmarks.bench_time_to_loss",
     "objectives": "benchmarks.bench_objectives",
+    "comm": "benchmarks.bench_comm",
     "fig3": "benchmarks.bench_skew_sweep",
     "fig5": "benchmarks.bench_mesh_sweep",
     "kernels": "benchmarks.bench_kernels",

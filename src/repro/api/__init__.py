@@ -25,6 +25,8 @@ from repro.api.report import RunReport, modeled_comm_words
 from repro.api.run import ProblemBundle, build_problem, run
 from repro.api.session import RoundEvent, Session
 from repro.api.sweep import SweepReport, sweep
+from repro.core.comm import CommLedger
+from repro.costmodel.calibrate import CalPoint, Calibration, calibrate
 
 __all__ = [
     "BACKENDS",
@@ -36,6 +38,10 @@ __all__ = [
     "plan",
     "RunReport",
     "modeled_comm_words",
+    "CommLedger",
+    "CalPoint",
+    "Calibration",
+    "calibrate",
     "ProblemBundle",
     "build_problem",
     "run",

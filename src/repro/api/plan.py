@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro.costmodel.calibrate import Calibration
 from repro.costmodel.hockney import CostBreakdown, HybridConfig, hybrid_epoch_cost
 from repro.costmodel.machines import MACHINES, Machine
 from repro.costmodel.optimum import classify_regime, joint_sb_star
@@ -42,14 +43,16 @@ class Plan:
     autotuned: bool = False
     s_star: float | None = None
     b_star: float | None = None
+    calibrated: bool = False
 
     def summary(self) -> str:
         sched, mesh = self.spec.schedule, self.spec.mesh
         tag = f" [autotuned s*={self.s_star:.2f} b*={self.b_star:.2f}]" if self.autotuned else ""
+        machine = self.spec.machine + ("+calibrated" if self.calibrated else "")
         return (
             f"{self.spec.name or self.spec.dataset}: mesh {mesh.p_r}×{mesh.p_c} "
             f"({mesh.backend}), s={sched.s} b={sched.b} τ={sched.tau} → predicted "
-            f"{self.cost.total:.3g} s/epoch on {self.spec.machine} "
+            f"{self.cost.total:.3g} s/epoch on {machine} "
             f"(dominant: {self.regime}, balance {self.balance:.2f}){tag}"
         )
 
@@ -70,10 +73,18 @@ def _autotune_schedule(spec: ExperimentSpec, machine: Machine) -> tuple[Experime
     return dataclasses.replace(spec, schedule=new_sched), s_raw, b_raw
 
 
-def plan(spec: ExperimentSpec) -> Plan:
+def plan(spec: ExperimentSpec, calibration: Calibration | None = None) -> Plan:
     """Cost-model the spec (and auto-tune it when asked). Pure planning:
-    nothing is built, placed, or run — safe as a CI dry-run."""
+    nothing is built, placed, or run — safe as a CI dry-run.
+
+    ``calibration`` (repro.costmodel.calibrate — fitted from a timed
+    run's CommLedger) re-targets the spec's machine with measured α/β/γ
+    before anything is predicted, so planned sweeps rank configurations
+    with machine-fitted constants instead of the static presets; the
+    Eq. 5–6 autotune then also optimizes against the fitted machine."""
     machine = MACHINES[spec.machine]
+    if calibration is not None:
+        machine = calibration.machine(machine)
     s_raw = b_raw = None
     autotuned = False
     if spec.autotune:
@@ -92,4 +103,5 @@ def plan(spec: ExperimentSpec) -> Plan:
         autotuned=autotuned,
         s_star=s_raw,
         b_star=b_raw,
+        calibrated=calibration is not None,
     )

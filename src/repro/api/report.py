@@ -3,26 +3,32 @@
 One report shape regardless of how the spec executed (simulated engine
 or shard_map device mesh): final weights, loss trace with the engine's
 ``loss_every`` semantics, measured solver wall time, the plan's
-predicted cost breakdown, and the modeled communication volume of the
-run (Table 3 payloads × the schedule's round structure).
+predicted cost breakdown, and the run's communication three ways —
+**modeled** (Table 2–3 closed forms, ``costmodel.schedule_comm_volume``),
+**counted** (the ``repro.core.comm`` ledger: what the round bodies
+actually issued), and **measured** (timed runs: host wall seconds per
+round in the same ledger).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
-import math
+import statistics
 
 import numpy as np
 
 from repro.api.plan import Plan
 from repro.api.spec import ExperimentSpec
+from repro.core.comm import CommLedger
+from repro.costmodel.hockney import schedule_comm_volume
 
 
 def modeled_comm_words(spec: ExperimentSpec, rounds: int | None = None) -> dict[str, float]:
-    """Per-rank communicated words implied by the schedule (Table 3):
-    one (s²b² + sb)-word row-team Allreduce per bundle when columns are
-    sharded, one ~n/p_c-word column Allreduce per round when there is
+    """Per-rank communicated words implied by the schedule — the
+    Table 2–3 closed form (``costmodel.schedule_comm_volume``): one
+    (s²b² + sb)-word row-team Allreduce per bundle when columns are
+    sharded, one ⌈n/p_c⌉-word column Allreduce per round when there is
     more than one row team.
 
     ``rounds`` overrides the schedule's round budget — the Session uses
@@ -33,11 +39,9 @@ def modeled_comm_words(spec: ExperimentSpec, rounds: int | None = None) -> dict[
     sched, mesh = spec.schedule, spec.mesh
     st_n = dataset_stats(spec.dataset).n
     r = sched.rounds if rounds is None else int(rounds)
-    bundles = r * (sched.tau // sched.s)
-    sb = sched.s * sched.b
-    gram = float(bundles * (sb * sb + sb)) if mesh.p_c > 1 else 0.0
-    sync = float(r * math.ceil(st_n / mesh.p_c)) if mesh.p_r > 1 else 0.0
-    return {"gram_words": gram, "sync_words": sync, "total_words": gram + sync}
+    return schedule_comm_volume(
+        st_n, mesh.p_r, mesh.p_c, sched.s, sched.b, sched.tau, rounds=r
+    ).words_dict()
 
 
 @dataclasses.dataclass
@@ -63,6 +67,9 @@ class RunReport:
     solve_time_s: float = 0.0     # steady state (wall − first chunk)
     rounds_completed: int | None = None  # rounds actually run (None: full budget)
     stop_reason: str | None = None  # StopPolicy verdict ("rounds" = budget)
+    ledger: CommLedger | None = None  # counted (+ measured, when timed)
+                                  # communication; None on reports
+                                  # rehydrated from pre-ledger JSON
 
     def time_to_target(self, target: float) -> tuple[float, int, float, bool]:
         """(seconds, rounds, loss, hit) to reach ``target`` on this
@@ -92,18 +99,25 @@ class RunReport:
             if self.stop_reason not in (None, "rounds")
             else ""
         )
+        comm = f"modeled comm {self.comm_words['total_words']:.3g} words/rank"
+        if self.ledger is not None:
+            comm += f", counted {self.ledger.counted_words()['total_words']:.3g}"
+            if self.ledger.seconds_per_round is not None:
+                comm += f", measured {self.ledger.seconds_per_round:.3g} s/round"
         return (
             f"{self.spec.name or self.spec.dataset} [{self.backend}]{obj} "
             f"s={sched.s} b={sched.b} τ={sched.tau} p_r×p_c="
             f"{self.spec.mesh.p_r}×{self.spec.mesh.p_c}: loss {self.final_loss:.4f} "
-            f"in {self.wall_time_s:.2f}s{trace}{stopped}; modeled comm "
-            f"{self.comm_words['total_words']:.3g} words/rank"
+            f"in {self.wall_time_s:.2f}s{trace}{stopped}; {comm}"
         )
 
     def to_dict(self) -> dict:
         """JSON-serializable record (weights elided — they belong in a
-        checkpoint, not a report). Round-trips through ``from_dict``."""
-        return {
+        checkpoint, not a report). Round-trips through ``from_dict``;
+        the ledger key is emitted only when a ledger exists, so default
+        records stay readable by (and byte-compatible with) pre-ledger
+        tooling."""
+        d = {
             "spec": self.spec.to_dict(),
             "backend": self.backend,
             "final_loss": self.final_loss,
@@ -123,6 +137,9 @@ class RunReport:
                 "regime": self.plan.regime,
             },
         }
+        if self.ledger is not None:
+            d["comm_ledger"] = self.ledger.to_dict()
+        return d
 
     def to_json(self, indent: int = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent)
@@ -131,10 +148,12 @@ class RunReport:
     def from_dict(cls, d: dict) -> "RunReport":
         """Rehydrate a persisted report (sweep resume). The plan is
         recomputed from the spec (pure and deterministic); the weights
-        are not stored in reports, so ``x`` is None."""
+        are not stored in reports, so ``x`` is None. Pre-ledger JSON
+        (no ``comm_ledger`` key) loads with ``ledger=None``."""
         from repro.api.plan import plan as plan_fn
 
         spec = ExperimentSpec.from_dict(d["spec"])
+        led = d.get("comm_ledger")
         return cls(
             spec=spec,
             plan=plan_fn(spec),
@@ -148,6 +167,34 @@ class RunReport:
             solve_time_s=float(d.get("solve_time_s", 0.0)),
             rounds_completed=d.get("rounds_completed"),
             stop_reason=d.get("stop_reason"),
+            ledger=CommLedger.from_dict(led) if led is not None else None,
+        )
+
+    def calibration_point(self):
+        """This run as a §6.5 calibration point (``costmodel.CalPoint``)
+        — or None when the run was not timed (no measured rounds in the
+        ledger). Regressors come from the ledger's captured rates and
+        the dataset statistics; the response is the median measured
+        round wall."""
+        from repro.costmodel.calibrate import CalPoint
+        from repro.costmodel.machines import MACHINES
+        from repro.api.spec import dataset_stats
+
+        if self.ledger is None or not self.ledger.round_seconds:
+            return None
+        machine = MACHINES[self.spec.machine]
+        st = dataset_stats(self.spec.dataset)
+        sched, mesh = self.spec.schedule, self.spec.mesh
+        # per-rank flops per round: τ inner iterations of b rows at
+        # 6z̄/p_c nnz-work + 2sb correction flops each (refine.py's
+        # per-iteration compute term × τ)
+        flops = sched.tau * sched.b * (6 * st.zbar / mesh.p_c + 2 * sched.s * sched.b)
+        return CalPoint(
+            phases_per_round=float(self.ledger.phases_per_round()),
+            bytes_per_round=self.ledger.bytes_per_round(machine.word_bytes),
+            flops_per_round=float(flops),
+            seconds_per_round=statistics.median(self.ledger.round_seconds),
+            label=self.spec.name or self.spec.dataset,
         )
 
     @classmethod

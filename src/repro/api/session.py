@@ -35,13 +35,15 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api.plan import Plan, plan
 from repro.api.report import RunReport, modeled_comm_words
 from repro.api.spec import ExperimentSpec
-from repro.core.engine import engine_loss, run_engine_chunk
+from repro.core.comm import MESH, TIMED, CommLedger
+from repro.core.engine import engine_comm_ledger, engine_loss, run_engine_chunk
 from repro.core.distributed import HybridDriver
 from repro.core.problem import problem_loss
 from repro.core.teams import global_problem
@@ -68,6 +70,9 @@ class RoundEvent:
                     recompiles) — the split ``RunReport`` carries.
     comm_words      cumulative modeled per-rank comm volume for the
                     rounds completed (Table 3 payloads).
+    ledger          snapshot of the run's CommLedger at this boundary:
+                    the *counted* collectives (and, timed runs, the
+                    measured per-round seconds) for the rounds done.
     stop            StopPolicy verdict at this boundary: None, or one of
                     "target_loss" / "max_seconds" / "max_rounds" /
                     "rounds" (schedule budget exhausted).
@@ -79,6 +84,7 @@ class RoundEvent:
     wall_time_s: float
     compile_time_s: float
     comm_words: dict[str, float]
+    ledger: CommLedger | None = None
     stop: str | None = None
 
 
@@ -119,6 +125,11 @@ class Session:
             self._driver = None
             self._x = jnp.asarray(x0)
             self._gp = global_problem(self.bundle.team)
+            # the counted-comm ledger: the round body's collectives,
+            # captured abstractly from the problem actually built
+            self.ledger = engine_comm_ledger(
+                self.spec.schedule, n, tp=self.bundle.team
+            )
         else:
             mesh = _make_device_mesh(self.spec.mesh.p_r, self.spec.mesh.p_c)
             self._driver = HybridDriver(
@@ -128,9 +139,11 @@ class Session:
                 x0,
                 self.spec.schedule,
                 loss_problem=self.bundle.global_problem,
+                comm=TIMED if self.spec.comm_timing else MESH,
             )
             self._x = None
             self._gp = None
+            self.ledger = self._driver.ledger  # driver commits rounds
 
     # ---- state probes ----
 
@@ -154,11 +167,26 @@ class Session:
     def _advance(self, k: int) -> None:
         """Run k rounds on the backend carry (no loss sampling)."""
         if self._driver is not None:
-            self._driver.advance(k)
+            self._driver.advance(k)  # commits (and, timed, measures) rounds
+        elif self.spec.comm_timing:
+            # timed collectives on the simulated engine: advance one
+            # round at a time, blocking per round, so the ledger gets a
+            # per-round wall — the iterate sequence is unchanged (chunked
+            # execution is bitwise-identical at any chunk size).
+            for i in range(int(k)):
+                t0 = time.perf_counter()
+                self._x = run_engine_chunk(
+                    self.bundle.team, self._x, self.rounds_done + i, 1,
+                    self.spec.schedule,
+                )
+                jax.block_until_ready(self._x)
+                self.ledger.add_round_seconds(time.perf_counter() - t0)
+            self.ledger.add_rounds(k)
         else:
             self._x = run_engine_chunk(
                 self.bundle.team, self._x, self.rounds_done, k, self.spec.schedule
             )
+            self.ledger.add_rounds(k)
         self.rounds_done += k
 
     def _sample_loss(self) -> float:
@@ -239,6 +267,7 @@ class Session:
             wall_time_s=self.wall_time_s,
             compile_time_s=self.compile_time_s,
             comm_words=modeled_comm_words(self.spec, rounds=self.rounds_done),
+            ledger=self.ledger.snapshot(),
             stop=self.stop_reason,
         )
 
@@ -286,6 +315,7 @@ class Session:
             solve_time_s=max(self.wall_time_s - self.compile_time_s, 0.0),
             rounds_completed=self.rounds_done,
             stop_reason=self.stop_reason,
+            ledger=self.ledger.snapshot(),
         )
 
     # ---- checkpoint / resume ----
@@ -327,6 +357,11 @@ class Session:
         sess.rounds_done = ck.rounds_done
         if sess._driver is not None:
             sess._driver.rounds_done = ck.rounds_done
+        # the run (as opposed to this process) has communicated
+        # ck.rounds_done rounds' worth — fast-forward the counted side;
+        # measured per-round seconds stay per-process (a fresh process
+        # recompiles and re-times).
+        sess.ledger.rounds = ck.rounds_done
         sess.losses = [float(v) for v in ck.losses]
         sess.wall_time_s = ck.wall_time_s
         sess.compile_time_s = ck.compile_time_s

@@ -148,6 +148,11 @@ class ExperimentSpec:
                  identical sample sequence.
     stop         round-granular early-stop policy (``StopPolicy``);
                  default: run the schedule's full round budget.
+    comm_timing  run with the *timed* collectives (repro.core.comm):
+                 each round blocks on completion and its wall seconds
+                 land in the report's CommLedger — the §6.5 calibration
+                 input (repro.costmodel.calibrate). Serializes per-round
+                 dispatch, so leave False for throughput runs.
     name         optional label for reports/sweeps.
     """
 
@@ -161,6 +166,7 @@ class ExperimentSpec:
     stop: StopPolicy = dataclasses.field(default_factory=StopPolicy)
     objective: str = "logistic"
     l2: float = 0.0
+    comm_timing: bool = False
     name: str = ""
 
     def __post_init__(self):
@@ -217,6 +223,11 @@ class ExperimentSpec:
             d["objective"] = self.objective
         if self.l2:
             d["l2"] = self.l2
+        # comm_timing likewise: emitted only when on, so default specs
+        # (and their content hashes / resume dirs) are byte-identical to
+        # every pre-ledger release.
+        if self.comm_timing:
+            d["comm_timing"] = True
         return d
 
     @classmethod

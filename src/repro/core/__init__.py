@@ -33,6 +33,14 @@ plans a spec with the cost model and dispatches it to either the
 simulated engine or the shard_map executor.
 """
 
+from repro.core.comm import (
+    COUNTING,
+    MESH,
+    TIMED,
+    Collectives,
+    CommLedger,
+    CommRate,
+)
 from repro.core.objective import (
     LOGISTIC,
     OBJECTIVES,
@@ -53,6 +61,7 @@ from repro.core.problem import (
 from repro.core.engine import (
     ParallelSGDSchedule,
     bundle_gram_v,
+    engine_comm_ledger,
     inner_corrections,
     run_engine_chunk,
     run_parallel_sgd,
@@ -68,12 +77,21 @@ from repro.core.distributed import (
     HybridDriver,
     build_2d_problem,
     gather_x,
+    hybrid_comm_ledger,
     make_hybrid_step,
     run_hybrid_distributed,
     scatter_x,
 )
 
 __all__ = [
+    "COUNTING",
+    "MESH",
+    "TIMED",
+    "Collectives",
+    "CommLedger",
+    "CommRate",
+    "engine_comm_ledger",
+    "hybrid_comm_ledger",
     "LOGISTIC",
     "OBJECTIVES",
     "Objective",

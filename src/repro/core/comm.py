@@ -1,0 +1,353 @@
+"""The explicit communication plane — one collectives layer under both
+backends, with a per-round communication ledger.
+
+The paper's thesis is that communication, not compute, bounds parallel
+SGD (Eq. 4, Tables 2–3). This module makes that quantity first-class:
+every collective either backend issues goes through one ``Collectives``
+object, and the structure of what was issued — op, mesh axis, span,
+payload words, calls per round — is recorded into a ``CommLedger`` that
+reports can place next to the Hockney model's predictions.
+
+Three implementations, one protocol:
+
+  counting   the simulated engine's ops. Numerically the identity /
+             plain team mean (the simulated ranks already hold globally
+             reduced values), but the call sites are the same ones the
+             mesh path reduces over — so counting them *is* counting
+             the algorithm's communication.
+  mesh       shard_map execution: real ``psum`` over the "cols" axis
+             (row-team Gram Allreduce) and ``pmean`` over "rows" (the
+             column weight sync) — exactly the collectives
+             repro.core.distributed issued before this layer existed,
+             bitwise.
+  timed      mesh + host-side per-round wall timing (the driver blocks
+             after each round and appends seconds to the ledger) — the
+             §6.5 calibration input (repro.costmodel.calibrate).
+
+Ledger capture is *structural*, not statistical: ``capture_rates`` runs
+the actual round body once under ``jax.eval_shape`` (abstract — no
+FLOPs, no devices) with a recorder installed; every collective call
+records its span and payload from the real traced shapes. A collective
+added to (or dropped from) a round body is therefore seen immediately —
+the ledger cannot drift from the code the way a hand-maintained formula
+can. Real jit traces never record (the recorder is a ContextVar that is
+only set inside ``capture_rates``), so compiled numerics are untouched.
+
+Accounting conventions (shared with the Table 2–3 closed forms in
+``repro.costmodel.hockney.schedule_comm_volume``):
+
+* words are **per rank** per call, counted from the buffers actually
+  reduced — the dense (sb, sb) Gram block plus the (sb,) residual, i.e.
+  s²b² + sb words per bundle (the strictly-lower-triangular s(s-1)b²/2
+  of Table 3 is the payload's information content; the wire carries the
+  dense block);
+* a collective whose span is 1 rank moves nothing: it is recorded (the
+  call exists) but contributes zero words and zero calls to the counted
+  totals;
+* the column weight-sync payload is the per-rank weight shard —
+  ⌈n/p_c⌉ words under a balanced partition. Unbalanced partitioners pad
+  shards to the max (n_loc ≥ ⌈n/p_c⌉) and the mesh ledger counts that
+  real padded payload, so counted-vs-modeled exposes padding overhead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+from contextvars import ContextVar
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "COUNTING",
+    "MESH",
+    "TIMED",
+    "Collectives",
+    "CommLedger",
+    "CommRate",
+    "capture_rates",
+]
+
+COLLECTIVE_KINDS = ("counting", "mesh", "timed")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRate:
+    """One collective call site of a round body, as captured.
+
+    op              "allreduce" (sum) or "allmean" (average).
+    axis            mesh axis reduced over: "cols" (row-team Gram
+                    Allreduce) or "rows" (column weight sync).
+    span            ranks the collective spans (p_c for "cols", p_r for
+                    "rows"); span 1 moves no bytes.
+    words_per_call  per-rank payload words of one call.
+    calls_per_round how many times the site executes per outer round
+                    (the s-bundle loop issues τ/s Gram Allreduces).
+    """
+
+    op: str
+    axis: str
+    span: int
+    words_per_call: int
+    calls_per_round: int
+
+    @property
+    def phases_per_call(self) -> int:
+        """Hockney latency phases: 2⌈log₂ span⌉ (reduce-scatter +
+        all-gather), 0 when the span is a single rank."""
+        if self.span <= 1:
+            return 0
+        return 2 * math.ceil(math.log2(self.span))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CommRate":
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class CommLedger:
+    """What a run communicated: captured per-round rates × committed
+    rounds, plus (timed runs) host-measured per-round wall seconds.
+
+    rates          the round body's collective call sites (captured
+                   once at build; identical every round — the schedule
+                   is static).
+    rounds         rounds accounted so far (the driver commits them as
+                   it advances).
+    round_seconds  per-round wall seconds, appended by the timed
+                   executor; empty for counting/mesh runs.
+    """
+
+    rates: tuple[CommRate, ...] = ()
+    rounds: int = 0
+    round_seconds: list[float] = dataclasses.field(default_factory=list)
+
+    # ---- accumulation (driver-side) ----
+
+    def add_rounds(self, k: int) -> None:
+        self.rounds += int(k)
+
+    def add_round_seconds(self, dt: float) -> None:
+        self.round_seconds.append(float(dt))
+
+    def snapshot(self) -> "CommLedger":
+        """An independent copy (what RoundEvent/RunReport carry)."""
+        return CommLedger(
+            rates=self.rates,
+            rounds=self.rounds,
+            round_seconds=list(self.round_seconds),
+        )
+
+    # ---- counted totals (span-1 collectives move nothing) ----
+
+    def _per_round(self, axis: str, field: str) -> int:
+        return sum(
+            getattr(r, field) * (r.calls_per_round if field != "calls_per_round" else 1)
+            for r in self.rates
+            if r.axis == axis and r.span > 1
+        )
+
+    def counted_words(self, rounds: int | None = None) -> dict[str, float]:
+        """Per-rank communicated words over ``rounds`` (default: the
+        committed count) — same keys as the modeled dict, so reports can
+        print the two side by side."""
+        r = self.rounds if rounds is None else int(rounds)
+        gram = float(r * self._per_round("cols", "words_per_call"))
+        sync = float(r * self._per_round("rows", "words_per_call"))
+        return {"gram_words": gram, "sync_words": sync, "total_words": gram + sync}
+
+    def counted_calls(self, rounds: int | None = None) -> dict[str, int]:
+        """Collective calls that actually spanned >1 rank."""
+        r = self.rounds if rounds is None else int(rounds)
+        return {
+            "gram_calls": r * self._per_round("cols", "calls_per_round"),
+            "sync_calls": r * self._per_round("rows", "calls_per_round"),
+        }
+
+    def phases_per_round(self) -> int:
+        """Hockney α-phases per round: Σ calls · 2⌈log₂ span⌉."""
+        return sum(
+            r.calls_per_round * r.phases_per_call for r in self.rates if r.span > 1
+        )
+
+    def bytes_per_round(self, word_bytes: int) -> float:
+        """On-wire bytes per rank per round (the β multiplier)."""
+        return float(word_bytes) * (
+            self._per_round("cols", "words_per_call")
+            + self._per_round("rows", "words_per_call")
+        )
+
+    # ---- measured (timed runs) ----
+
+    @property
+    def seconds_per_round(self) -> float | None:
+        """Median measured round wall (None when the run was untimed)."""
+        if not self.round_seconds:
+            return None
+        return statistics.median(self.round_seconds)
+
+    # ---- serialization ----
+
+    def to_dict(self) -> dict:
+        return {
+            "rates": [r.to_dict() for r in self.rates],
+            "rounds": self.rounds,
+            "round_seconds": list(self.round_seconds),
+            # derived, for human-readable reports (ignored on load)
+            "counted": self.counted_words(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CommLedger":
+        return cls(
+            rates=tuple(CommRate.from_dict(r) for r in d.get("rates", ())),
+            rounds=int(d.get("rounds", 0)),
+            round_seconds=[float(v) for v in d.get("round_seconds", ())],
+        )
+
+
+# ---- capture machinery -------------------------------------------------
+#
+# Recording is scoped to capture_rates via a ContextVar: inside it the
+# collective ops append a CommRate (from the traced payload shapes) and
+# return their input unchanged — the abstract trace needs no mesh axes.
+# Outside it (every real trace and execution) the ops are exactly the
+# pre-layer computation.
+
+
+@dataclasses.dataclass
+class _Recorder:
+    spans: dict[str, int]
+    rates: list[CommRate]
+
+
+_RECORDER: ContextVar[_Recorder | None] = ContextVar("repro_comm_recorder", default=None)
+
+
+def capture_rates(fn, *abstract_args, spans: dict[str, int]) -> tuple[CommRate, ...]:
+    """Trace ``fn`` abstractly (``jax.eval_shape`` — no FLOPs, no
+    devices) with recording on, and return every collective call site it
+    issued. ``spans`` maps mesh axis name → rank count ({"cols": p_c,
+    "rows": p_r})."""
+    rec = _Recorder(spans=dict(spans), rates=[])
+    token = _RECORDER.set(rec)
+    try:
+        jax.eval_shape(fn, *abstract_args)
+    finally:
+        _RECORDER.reset(token)
+    return tuple(rec.rates)
+
+
+def _tree_words(tree) -> int:
+    return int(sum(math.prod(leaf.shape) for leaf in jax.tree_util.tree_leaves(tree)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Collectives:
+    """The collective ops a round body issues, by kind.
+
+    Frozen and stateless: instances hash and compare by ``kind``, so
+    closing a jitted round body over one never fragments the jit cache.
+    The module singletons ``COUNTING`` / ``MESH`` / ``TIMED`` are the
+    three implementations; ``TIMED`` shares ``MESH``'s ops — the timing
+    itself is host-side, in the driver (``HybridDriver.advance`` /
+    ``Session._advance`` block per round and append to the ledger).
+    """
+
+    kind: str = "counting"
+
+    def __post_init__(self):
+        if self.kind not in COLLECTIVE_KINDS:
+            raise ValueError(f"kind={self.kind!r} not in {COLLECTIVE_KINDS}")
+
+    @property
+    def timed(self) -> bool:
+        return self.kind == "timed"
+
+    @property
+    def on_mesh(self) -> bool:
+        return self.kind in ("mesh", "timed")
+
+    # ---- the row-team (Gram) Allreduce: sum over column shards ----
+
+    def allreduce_cols(self, tree, *, calls_per_round: int = 1,
+                       words_per_call: int | None = None):
+        """Sum ``tree`` across the "cols" mesh axis (the per-bundle
+        (G, v) Allreduce — Table 3's row-team payload).
+
+        counting: identity — the simulated ranks compute the full (G, v)
+        directly, so the reduced value is already in hand. mesh/timed:
+        one ``psum`` per leaf (separate binds, exactly the two psum
+        calls the pre-layer code issued — bitwise-identical HLO).
+
+        ``words_per_call`` overrides the payload derived from the traced
+        leaf shapes — the s = 1 engine corner uses it to account the
+        full (G, v) payload its distributed twin puts on the wire even
+        though the simulated body only materializes v.
+        """
+        rec = _RECORDER.get()
+        if rec is not None:
+            words = words_per_call if words_per_call is not None else _tree_words(tree)
+            rec.rates.append(CommRate(
+                op="allreduce",
+                axis="cols",
+                span=rec.spans.get("cols", 1),
+                words_per_call=int(words),
+                calls_per_round=int(calls_per_round),
+            ))
+            return tree
+        if not self.on_mesh:
+            return tree
+        return jax.tree_util.tree_map(lambda t: jax.lax.psum(t, "cols"), tree)
+
+    # ---- the column Allreduce: average weights across row teams ----
+
+    def allmean_rows(self, x, *, calls_per_round: int = 1,
+                     words_per_call: int | None = None):
+        """Average the per-shard weight slab across the "rows" mesh axis
+        (the per-τ-iterations FedAvg sync — Table 3's column payload).
+        Mesh/timed only; the simulated engine's stacked form is
+        ``allmean_teams``."""
+        rec = _RECORDER.get()
+        if rec is not None:
+            words = words_per_call if words_per_call is not None else _tree_words(x)
+            rec.rates.append(CommRate(
+                op="allmean",
+                axis="rows",
+                span=rec.spans.get("rows", 1),
+                words_per_call=int(words),
+                calls_per_round=int(calls_per_round),
+            ))
+            return x
+        if not self.on_mesh:
+            return x
+        return jax.lax.pmean(x, "rows")
+
+    def allmean_teams(self, xs, *, words_per_call: int,
+                      calls_per_round: int = 1):
+        """The simulated form of ``allmean_rows``: the p_r team iterates
+        arrive stacked as ``xs`` (p_r, n) and the mean over the leading
+        axis *is* the collective (exact SPMD semantics on one device).
+        ``words_per_call`` is the per-rank shard payload ⌈n/p_c⌉ — the
+        stacked shape carries the global n, not the per-rank slab, so
+        the caller supplies it."""
+        rec = _RECORDER.get()
+        if rec is not None:
+            rec.rates.append(CommRate(
+                op="allmean",
+                axis="rows",
+                span=rec.spans.get("rows", 1),
+                words_per_call=int(words_per_call),
+                calls_per_round=int(calls_per_round),
+            ))
+        return jnp.mean(xs, axis=0)
+
+
+COUNTING = Collectives("counting")
+MESH = Collectives("mesh")
+TIMED = Collectives("timed")

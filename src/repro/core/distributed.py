@@ -15,6 +15,12 @@ Per s-bundle (the paper's row-team Allreduce):
 Per τ inner iterations (the paper's column Allreduce):
   x_local ← pmean over "rows" (n/p_c words per rank).
 
+Both collectives are issued through repro.core.comm (the mesh — or,
+for calibration, timed — collectives): ``hybrid_comm_ledger`` captures
+the round body's exact spans and payloads into a ``CommLedger``, and
+``HybridDriver`` commits rounds (and, timed, per-round wall seconds)
+into it as it advances.
+
 The execution knobs arrive as one ``ParallelSGDSchedule`` — the same
 object the simulated engine consumes — so the two paths cannot drift on
 plumbing. The legacy loose-scalar signatures (s=..., b=..., ...) are
@@ -27,6 +33,7 @@ multi-device subprocess); the simulated version is the oracle.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 
 import jax
@@ -35,6 +42,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import comm as comm_plane
+from repro.core.comm import MESH, Collectives, CommLedger
 from repro.core.engine import ParallelSGDSchedule, bundle_gram_v, inner_corrections
 from repro.core.objective import LOGISTIC, Objective, get_objective
 from repro.core.problem import Problem, problem_loss
@@ -178,6 +187,84 @@ def _reject_scalars_with_schedule(caller: str, **scalars) -> None:
         )
 
 
+def _build_round_fn(prob: Hybrid2DProblem, sched: ParallelSGDSchedule,
+                    comm: Collectives = MESH):
+    """The per-rank round body (what shard_map maps): τ inner s-step
+    iterations + the column average, all communication issued through
+    the ``comm`` collectives. Shared by ``make_hybrid_step`` (which
+    shard_maps and jits it) and ``hybrid_comm_ledger`` (which captures
+    it abstractly) — one function, so the ledger cannot drift from the
+    executed collectives."""
+    s, b_, eta_ = sched.s, sched.b, sched.eta
+    sb = s * b_
+    n_loc = prob.n_loc
+    bundles = sched.tau // s
+    objective = prob.objective
+    lam = objective.l2
+    # "pallas" is the simulated engine's default; inside shard_map the
+    # same math runs on the blocked panel-streaming path (shard_map-safe
+    # everywhere, incl. CPU interpret containers).
+    gram_ = "blocked" if sched.gram == "pallas" else sched.gram
+    bk_ = sched.bk
+
+    def round_fn(idx_blk, val_blk, x_loc, round_idx):
+        # shapes inside shard_map: idx/val (1, 1, rows_local, width),
+        # x_loc (n_loc,)
+        idx_blk = idx_blk[0, 0]
+        val_blk = val_blk[0, 0]
+        m_local = idx_blk.shape[0]
+
+        def bundle(x_loc, t):
+            k0 = round_idx * bundles + t
+            start = (k0 * sb) % m_local
+            bi = jax.lax.dynamic_slice_in_dim(idx_blk, start, sb, axis=0)
+            bv = jax.lax.dynamic_slice_in_dim(val_blk, start, sb, axis=0)
+            # local partial (G, v) via the engine's shared primitive —
+            # then the row-team Allreduce (paper Table 3 payload)
+            g_part, v_part = bundle_gram_v(bi, bv, x_loc, n_loc, gram=gram_, bk=bk_)
+            g, v = comm.allreduce_cols((g_part, v_part), calls_per_round=bundles)
+            u = inner_corrections(g, v, s, b_, eta_, objective)
+            # Yᵀu stays local under column partitioning
+            blk = EllBlock(indices=bi, values=bv, n=n_loc)
+            if lam == 0.0:
+                return x_loc + (eta_ / b_) * ell_rmatvec(blk, u).astype(x_loc.dtype), None
+            # decay-folded update, exact under column sharding: the
+            # L2 decay is elementwise, so each shard decays its own
+            # slice (padded slots stay zero: ρ·0 + 0).
+            rho_s = jnp.asarray(1.0 - eta_ * lam, x_loc.dtype) ** s
+            return (
+                rho_s * x_loc + (eta_ / b_) * ell_rmatvec(blk, u).astype(x_loc.dtype),
+                None,
+            )
+
+        x_loc, _ = jax.lax.scan(bundle, x_loc, jnp.arange(bundles))
+        # column Allreduce: FedAvg averaging across row teams (n/p_c
+        # words) — the result is row-replicated, so the out_spec can
+        # drop the "rows" axis.
+        return comm.allmean_rows(x_loc)
+
+    return round_fn
+
+
+def hybrid_comm_ledger(prob: Hybrid2DProblem, sched: ParallelSGDSchedule,
+                       comm: Collectives = MESH) -> CommLedger:
+    """Per-rank ``CommLedger`` of the shard_map execution: the *same*
+    round body ``make_hybrid_step`` runs, traced abstractly
+    (``jax.eval_shape`` — no devices, no mesh needed) with the comm
+    recorder installed. Every psum/pmean the step will issue records its
+    span and per-rank payload from the traced per-shard shapes."""
+    round_fn = _build_round_fn(prob, sched, comm)
+    rates = comm_plane.capture_rates(
+        round_fn,
+        jax.ShapeDtypeStruct((1, 1, prob.rows_local, prob.width), prob.indices.dtype),
+        jax.ShapeDtypeStruct((1, 1, prob.rows_local, prob.width), prob.values.dtype),
+        jax.ShapeDtypeStruct((prob.n_loc,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        spans={"cols": prob.p_c, "rows": prob.p_r},
+    )
+    return CommLedger(rates=rates)
+
+
 def make_hybrid_step(
     mesh: Mesh,
     prob: Hybrid2DProblem,
@@ -189,6 +276,7 @@ def make_hybrid_step(
     bk: int | None = None,
     *,
     s: int | None = None,
+    comm: Collectives = MESH,
 ):
     """Return a jitted fn (indices, values, x_pad, round_idx) → x_pad
     executing one HybridSGD round (τ inner s-step iterations + column
@@ -198,6 +286,8 @@ def make_hybrid_step(
     consumes; its ``gram`` selects the bundle backend (a schedule-level
     "pallas" is executed as "blocked" here — identical math, and the
     panel-streaming jnp path is safe inside shard_map on every backend).
+    All collectives are issued through ``comm`` (repro.core.comm; the
+    mesh/timed kinds run the same psum/pmean this module always issued).
 
     The returned step donates ``x_pad`` and pins its output to the
     ``P("cols")`` sharding of the input, so drivers can chain rounds
@@ -228,54 +318,11 @@ def make_hybrid_step(
         )
     if sched.eta <= 0:
         raise ValueError(f"eta={sched.eta} must be > 0 to run the solver")
-    s, b_, eta_ = sched.s, sched.b, sched.eta
-    sb = s * b_
-    n_loc = prob.n_loc
-    bundles = sched.tau // s
-    objective = prob.objective
-    lam = objective.l2
-    # "pallas" is the simulated engine's default; inside shard_map the
-    # same math runs on the blocked panel-streaming path (shard_map-safe
-    # everywhere, incl. CPU interpret containers).
-    gram_ = "blocked" if sched.gram == "pallas" else sched.gram
-    bk_ = sched.bk
-
-    def round_fn(idx_blk, val_blk, x_loc, round_idx):
-        # shapes inside shard_map: idx/val (1, 1, rows_local, width),
-        # x_loc (n_loc,)
-        idx_blk = idx_blk[0, 0]
-        val_blk = val_blk[0, 0]
-        m_local = idx_blk.shape[0]
-
-        def bundle(x_loc, t):
-            k0 = round_idx * bundles + t
-            start = (k0 * sb) % m_local
-            bi = jax.lax.dynamic_slice_in_dim(idx_blk, start, sb, axis=0)
-            bv = jax.lax.dynamic_slice_in_dim(val_blk, start, sb, axis=0)
-            # local partial (G, v) via the engine's shared primitive —
-            # then the row-team Allreduce (paper Table 3 payload)
-            g_part, v_part = bundle_gram_v(bi, bv, x_loc, n_loc, gram=gram_, bk=bk_)
-            g = jax.lax.psum(g_part, "cols")
-            v = jax.lax.psum(v_part, "cols")
-            u = inner_corrections(g, v, s, b_, eta_, objective)
-            # Yᵀu stays local under column partitioning
-            blk = EllBlock(indices=bi, values=bv, n=n_loc)
-            if lam == 0.0:
-                return x_loc + (eta_ / b_) * ell_rmatvec(blk, u).astype(x_loc.dtype), None
-            # decay-folded update, exact under column sharding: the
-            # L2 decay is elementwise, so each shard decays its own
-            # slice (padded slots stay zero: ρ·0 + 0).
-            rho_s = jnp.asarray(1.0 - eta_ * lam, x_loc.dtype) ** s
-            return (
-                rho_s * x_loc + (eta_ / b_) * ell_rmatvec(blk, u).astype(x_loc.dtype),
-                None,
-            )
-
-        x_loc, _ = jax.lax.scan(bundle, x_loc, jnp.arange(bundles))
-        # column Allreduce: FedAvg averaging across row teams (n/p_c
-        # words) — the result is row-replicated, so the out_spec can
-        # drop the "rows" axis.
-        return jax.lax.pmean(x_loc, "rows")
+    if not comm.on_mesh:
+        raise ValueError(
+            f"make_hybrid_step needs mesh collectives (mesh/timed), got {comm.kind!r}"
+        )
+    round_fn = _build_round_fn(prob, sched, comm)
 
     smapped = shard_map(
         round_fn,
@@ -304,6 +351,13 @@ class HybridDriver:
     The round counter is part of the carry: ``advance(k)`` runs global
     rounds ``rounds_done .. rounds_done+k-1``, so chunked execution
     reproduces the uninterrupted loop's sample sequence exactly.
+
+    The driver owns the run's ``CommLedger``: the collectives of the
+    round body are captured once at construction (``hybrid_comm_ledger``
+    on the very round_fn the step executes) and committed per advanced
+    round. With ``comm=TIMED`` each round blocks on completion and its
+    wall seconds land in the ledger — the §6.5 calibration input
+    (repro.costmodel.calibrate).
     """
 
     def __init__(
@@ -315,13 +369,17 @@ class HybridDriver:
         sched: ParallelSGDSchedule,
         loss_problem: Problem | None = None,
         rounds_done: int = 0,
+        comm: Collectives = MESH,
     ):
         self.prob = prob
         self.cp = cp
         self.sched = sched
         self.loss_problem = loss_problem
         self.rounds_done = int(rounds_done)
-        self._step = make_hybrid_step(mesh, prob, sched)
+        self.comm = comm
+        self.ledger = hybrid_comm_ledger(prob, sched, comm)
+        self.ledger.rounds = self.rounds_done
+        self._step = make_hybrid_step(mesh, prob, sched, comm=comm)
         data_sh = NamedSharding(mesh, P("rows", "cols"))
         self._x_sh = NamedSharding(mesh, P("cols"))
         self._idx = jax.device_put(prob.indices, data_sh)
@@ -331,12 +389,18 @@ class HybridDriver:
         )
 
     def advance(self, k: int) -> None:
-        """Run ``k`` rounds; weights stay device-resident (async)."""
+        """Run ``k`` rounds; weights stay device-resident (async).
+        Timed collectives block per round and record wall seconds."""
         for _ in range(int(k)):
+            t0 = time.perf_counter() if self.comm.timed else 0.0
             self._x_pad = self._step(
                 self._idx, self._val, self._x_pad, jnp.int32(self.rounds_done)
             )
+            if self.comm.timed:
+                jax.block_until_ready(self._x_pad)
+                self.ledger.add_round_seconds(time.perf_counter() - t0)
             self.rounds_done += 1
+        self.ledger.rounds = self.rounds_done
 
     def gather(self) -> np.ndarray:
         """Current global weights (n,) — blocks on the dispatch chain."""

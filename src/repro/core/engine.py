@@ -31,6 +31,13 @@ decay from the problem's ``objective`` — the logistic default routes
 through bitwise the same computation as the pre-objective engine, and
 λ > 0 is exact via the decay-aware correction recurrence.
 
+*Communication* is explicit (repro.core.comm): the round body issues
+its two collectives — the per-bundle row-team (G, v) Allreduce and the
+per-round p_r-team average — through the counting collectives (the
+identity on this backend's already-global values), so
+``engine_comm_ledger`` can capture exactly what a run communicates and
+reports can place it next to the Eq. 4 model's predictions.
+
 repro.core.{sgd,sstep,fedavg,hybrid} re-export configured engine calls
 for backwards compatibility.
 """
@@ -43,6 +50,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import comm as comm_plane
+from repro.core.comm import COUNTING, CommLedger
 from repro.core.objective import LOGISTIC, Objective
 from repro.core.problem import Problem, problem_loss
 from repro.core.teams import TeamProblem, global_problem
@@ -250,11 +259,24 @@ def _team_inner_iterations(indices, values, n: int, x, round_idx, eta,
         if s == 1:
             # FedAvg/MB-SGD corner: the Gram is empty (no deferred
             # updates to correct) — one SpMV + one SpMVᵀ, exactly
-            # Algorithm 2's local step.
-            u = objective.residual(ell_matvec(bundle, x))
+            # Algorithm 2's local step. The simulated body only
+            # materializes v = Yx, but the distributed corner psums the
+            # full (G, v) bundle even at s = 1 (G rides the wire though
+            # numerically unused), so the counted payload is pinned to
+            # the same sb² + sb words.
+            yx = COUNTING.allreduce_cols(
+                ell_matvec(bundle, x),
+                calls_per_round=bundles,
+                words_per_call=sb * sb + sb,
+            )
+            u = objective.residual(yx)
         else:
             g, v = bundle_gram_v(idx, val, x, n, gram=sched.gram, bk=sched.bk,
                                  interpret=sched.interpret)
+            # row-team Allreduce of the bundle (G, v) — identity here
+            # (the simulated rank computes the full reduction), the
+            # recorded payload when the round body is captured.
+            g, v = COUNTING.allreduce_cols((g, v), calls_per_round=bundles)
             u = inner_corrections(g, v, s, b, eta, objective)
         if lam == 0.0:
             return x + (eta / b) * ell_rmatvec(bundle, u).astype(x.dtype), None
@@ -286,7 +308,10 @@ def _one_round(tp, x, r, eta, sched):
         # lax.map (not vmap): teams run sequentially on one device,
         # bounding peak memory at one team's bundle working set.
         xs = jax.lax.map(team, (tp.indices, tp.values))
-    return jnp.mean(xs, axis=0)
+    # column Allreduce: the p_r-team average, issued through the comm
+    # plane (numerically the same stacked mean; the per-rank payload is
+    # the balanced ⌈n/p_c⌉-word weight shard — Table 3's sync column).
+    return COUNTING.allmean_teams(xs, words_per_call=-(-tp.n // sched.p_c))
 
 
 @partial(jax.jit, static_argnames=("sched",))
@@ -400,6 +425,45 @@ def run_parallel_sgd(
         )
     eta = jnp.asarray(sched.eta, x0.dtype)
     return _run_engine(tp, x0, eta, dataclasses.replace(sched, eta=0.0))
+
+
+def engine_comm_ledger(
+    sched: ParallelSGDSchedule,
+    n: int,
+    tp: TeamProblem | None = None,
+    width: int = 2,
+) -> CommLedger:
+    """The simulated engine's per-rank ``CommLedger``: every collective
+    the round body issues, captured by tracing ``_one_round`` abstractly
+    (``jax.eval_shape`` — no FLOPs run, no dataset needed).
+
+    With ``tp`` given the capture traces the real problem's shapes;
+    without it a shape-only stand-in is synthesized (``width`` nonzeros
+    per row, one bundle of rows per team) — the communication structure
+    depends only on the schedule and n, never on the data, so both
+    forms record identical rates. Spans come from the schedule's
+    (p_r, p_c): the ledger of the simulated run *is* the ledger of the
+    mesh execution it simulates (tested against
+    ``repro.core.distributed.hybrid_comm_ledger``)."""
+    if tp is None:
+        sb = sched.s * sched.b
+        tp = TeamProblem(
+            indices=jax.ShapeDtypeStruct((sched.p_r, sb, width), jnp.int32),
+            values=jax.ShapeDtypeStruct((sched.p_r, sb, width), jnp.float32),
+            rows_valid=jax.ShapeDtypeStruct((sched.p_r, sb), jnp.bool_),
+            p=sched.p_r,
+            m=sched.p_r * sb,
+            n=n,
+        )
+    rates = comm_plane.capture_rates(
+        partial(_one_round, sched=sched),
+        tp,
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        spans={"cols": sched.p_c, "rows": sched.p_r},
+    )
+    return CommLedger(rates=rates)
 
 
 def single_team(problem: Problem) -> TeamProblem:

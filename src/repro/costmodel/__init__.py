@@ -2,14 +2,17 @@
 
 from repro.costmodel.machines import MACHINES, PERLMUTTER, TPU_V5E, Machine
 from repro.costmodel.hockney import (
+    CommVolume,
     CostBreakdown,
     HybridConfig,
     fedavg_epoch_cost,
     hybrid_epoch_cost,
     mbsgd_epoch_cost,
     per_sample_costs,
+    schedule_comm_volume,
     sstep_epoch_cost,
 )
+from repro.costmodel.calibrate import CalPoint, Calibration, calibrate
 from repro.costmodel.optimum import (
     Regime,
     b_star,
@@ -33,6 +36,11 @@ __all__ = [
     "PERLMUTTER",
     "TPU_V5E",
     "Machine",
+    "CalPoint",
+    "Calibration",
+    "calibrate",
+    "CommVolume",
+    "schedule_comm_volume",
     "CostBreakdown",
     "HybridConfig",
     "fedavg_epoch_cost",

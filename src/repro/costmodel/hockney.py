@@ -121,6 +121,82 @@ def mbsgd_epoch_cost(m: int, n: int, zbar: float, b: int, p: int, machine: Machi
     return fedavg_epoch_cost(m, n, zbar, b, 1, p, machine)
 
 
+# ---- Tables 2–3: communicated words per rank (closed form) ----
+
+
+@dataclasses.dataclass(frozen=True)
+class CommVolume:
+    """Closed-form per-rank communication of a schedule, in words and
+    calls — the quantity the ``repro.core.comm`` ledger counts and the
+    β/α terms of Eq. 4 charge for.
+
+    gram_*   the row-team (G, v) Allreduce over the p_c column shards:
+             one call per s-bundle, s²b² + sb words on the wire (the
+             dense (sb, sb) Gram block + residual; ``gram_words_min``
+             is Table 3's strictly-lower-triangular information content
+             s(s-1)b²/2 + sb — the wire payload's lower bound).
+    sync_*   the column weight Allreduce over the p_r row teams: one
+             call per round, the ⌈n/p_c⌉-word balanced weight shard.
+
+    A collective spanning a single rank moves nothing: its calls and
+    words are zero here, matching the ledger's counted totals.
+    """
+
+    gram_calls: int
+    gram_words: float
+    gram_words_min: float
+    gram_span: int
+    sync_calls: int
+    sync_words: float
+    sync_span: int
+
+    @property
+    def total_words(self) -> float:
+        return self.gram_words + self.sync_words
+
+    def words_dict(self) -> dict[str, float]:
+        """The modeled-volume dict reports carry ({gram,sync,total})."""
+        return {
+            "gram_words": self.gram_words,
+            "sync_words": self.sync_words,
+            "total_words": self.total_words,
+        }
+
+
+def schedule_comm_volume(
+    n: int, p_r: int, p_c: int, s: int, b: int, tau: int, rounds: int = 1
+) -> CommVolume:
+    """Tables 2–3 as word counts: per-rank communication of ``rounds``
+    outer rounds of the (p_r, p_c, s, b, τ) schedule.
+
+    The four named corners are limits of this one form:
+      MB-SGD   (p_r=1, s=1, τ=1)   gram only (when p_c > 1)
+      s-step   (p_r=1, τ=s)        gram only (one bundle per round)
+      FedAvg   (s=1, p_c=1)        sync only
+      Hybrid   general             both
+    """
+    bundles = rounds * (tau // s)
+    sb = s * b
+    gram_active = p_c > 1
+    sync_active = p_r > 1
+    gram_calls = bundles if gram_active else 0
+    gram_words = float(bundles * (sb * sb + sb)) if gram_active else 0.0
+    gram_words_min = (
+        float(bundles * (s * (s - 1) * b * b // 2 + sb)) if gram_active else 0.0
+    )
+    sync_calls = rounds if sync_active else 0
+    sync_words = float(rounds * math.ceil(n / p_c)) if sync_active else 0.0
+    return CommVolume(
+        gram_calls=gram_calls,
+        gram_words=gram_words,
+        gram_words_min=gram_words_min,
+        gram_span=p_c,
+        sync_calls=sync_calls,
+        sync_words=sync_words,
+        sync_span=p_r,
+    )
+
+
 # ---- Table 3: per-sample costs (amortized over the comm period) ----
 
 

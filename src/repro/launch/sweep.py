@@ -8,6 +8,8 @@ twin of ``repro.launch.train``'s flag-style CLI:
     PYTHONPATH=src python -m repro.launch.sweep --spec spec.json --plan-only
     PYTHONPATH=src python -m repro.launch.sweep --spec sweep.json --resume ckpt/ --table
     PYTHONPATH=src python -m repro.launch.sweep --spec spec.json --objective squared_hinge --l2 1e-3
+    PYTHONPATH=src python -m repro.launch.sweep --spec sweep.json --timed --out measured.json
+    PYTHONPATH=src python -m repro.launch.sweep --spec sweep.json --calibrate measured.json --plan-only
 
 The spec file holds one ``ExperimentSpec`` dict or a list of them (a
 sweep). Each spec is cost-model planned (Eq. 4 breakdown + regime;
@@ -22,6 +24,15 @@ interrupt the sweep anywhere (Ctrl-C, preemption, ``--max-points``)
 and re-invoke with the same ``--resume`` to continue — finished points
 are rehydrated, never re-run. ``--table`` prints the paper-style
 time-to-loss table (§7.5) over the collected reports.
+
+The communication loop closes here too: ``--timed`` runs every spec
+with the timed collectives (per-round wall seconds land in each
+report's CommLedger — persist with ``--out``), and ``--calibrate
+report.json`` fits Hockney constants from such a prior run
+(repro.costmodel.calibrate) and re-plans against the fitted machine,
+printing the re-ranked prediction table. ``--calibrate`` requires
+``--plan-only``: calibration re-ranks predictions, it never changes
+what runs.
 """
 
 from __future__ import annotations
@@ -31,7 +42,7 @@ import dataclasses
 import json
 from pathlib import Path
 
-from repro.api import ExperimentSpec, plan, sweep
+from repro.api import ExperimentSpec, RunReport, calibrate, plan, sweep
 from repro.core.objective import OBJECTIVES
 
 
@@ -43,6 +54,37 @@ def load_specs(path: Path) -> list[ExperimentSpec]:
     if not isinstance(raw, list):
         raise ValueError(f"{path}: expected a spec object or a list of them")
     return [ExperimentSpec.from_dict(d) for d in raw]
+
+
+def _report_dicts(raw) -> list[dict]:
+    """Report dicts from any shape this CLI emits: one report, a list
+    of them (--out), or a SweepReport dump ({"reports": [...]})."""
+    if isinstance(raw, dict):
+        if "reports" in raw:
+            return list(raw["reports"])
+        return [raw]
+    if isinstance(raw, list):
+        return list(raw)
+    raise ValueError("expected a report object, a list of them, or a sweep dump")
+
+
+def load_calibration(path: Path):
+    """Fit machine constants from a prior run's persisted report(s):
+    every report with a timed CommLedger becomes one calibration point
+    (``RunReport.calibration_point``)."""
+    points = []
+    for d in _report_dicts(json.loads(path.read_text())):
+        if "spec" not in d or "backend" not in d:
+            continue  # plan-only records are not reports
+        pt = RunReport.from_dict(d).calibration_point()
+        if pt is not None:
+            points.append(pt)
+    if not points:
+        raise SystemExit(
+            f"--calibrate {path}: no timed ledgers found — produce one with "
+            f"`repro.launch.sweep --spec ... --timed --out {path}`"
+        )
+    return calibrate(points)
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -70,7 +112,22 @@ def main(argv: list[str] | None = None) -> None:
                          "(repro.core.objective registry)")
     ap.add_argument("--l2", type=float, default=None, metavar="LAMBDA",
                     help="override every loaded spec's L2 coefficient")
+    ap.add_argument("--timed", action="store_true",
+                    help="run every spec with the timed collectives "
+                         "(per-round wall into the report's CommLedger — "
+                         "the --calibrate input)")
+    ap.add_argument("--calibrate", type=Path, default=None, metavar="REPORT",
+                    help="fit Hockney constants (α/β/γ) from a prior run's "
+                         "report JSON (a --timed --out file) and plan "
+                         "against the fitted machine instead of the preset "
+                         "(requires --plan-only: calibration re-ranks "
+                         "predictions, it does not change what runs)")
     args = ap.parse_args(argv)
+    if args.calibrate is not None and not args.plan_only:
+        # without this, the printed calibrated plans (incl. autotuned
+        # schedules) would diverge from what the sweep then executes —
+        # the run path plans with the preset machine.
+        ap.error("--calibrate requires --plan-only")
 
     specs = load_specs(args.spec)
     override = {}
@@ -78,17 +135,34 @@ def main(argv: list[str] | None = None) -> None:
         override["objective"] = args.objective
     if args.l2 is not None:
         override["l2"] = args.l2
+    if args.timed:
+        override["comm_timing"] = True
     if override:
         # replace() re-validates through __post_init__; the override
         # also moves each spec's content hash, so --resume dirs never
-        # mix objectives.
+        # mix objectives (or timed with untimed runs).
         specs = [dataclasses.replace(s, **override) for s in specs]
+
+    calibration = None
+    if args.calibrate is not None:
+        calibration = load_calibration(args.calibrate)
+        print(f"[cal  ] {calibration.summary()}", flush=True)
+
     records = []
-    for spec in specs:
-        pl = plan(spec)
+    planned = []
+    preset = [plan(s) for s in specs] if calibration is not None else None
+    for i, spec in enumerate(specs):
+        pl = plan(spec, calibration=calibration)
+        planned.append(pl)
         print(f"[plan ] {pl.summary()}", flush=True)
-        records.append({"spec": pl.spec.to_dict(),
-                        "predicted_total_s": pl.cost.total, "regime": pl.regime})
+        rec = {"spec": pl.spec.to_dict(),
+               "predicted_total_s": pl.cost.total, "regime": pl.regime}
+        if calibration is not None:
+            rec["preset_total_s"] = preset[i].cost.total
+            rec["calibration"] = calibration.to_dict()
+        records.append(rec)
+    if calibration is not None and len(planned) > 1:
+        _print_reranked(planned, preset)
     if args.plan_only:
         _finish(args, records, f"{len(records)} spec(s) planned")
         return
@@ -103,6 +177,20 @@ def main(argv: list[str] | None = None) -> None:
     if args.table and result.reports:
         print(result.time_to_loss_table(target=args.target_loss))
     _finish(args, result.to_dict()["reports"], result.summary())
+
+
+def _print_reranked(planned, preset) -> None:
+    """The calibrated ranking next to the preset one: which config the
+    model now says to run, and whether the fitted constants moved it."""
+    order_cal = sorted(range(len(planned)), key=lambda i: planned[i].cost.total)
+    order_pre = sorted(range(len(preset)), key=lambda i: preset[i].cost.total)
+    print(f"{'rank':>4s} {'point':24s} {'calibrated s/ep':>15s} "
+          f"{'preset s/ep':>12s} {'preset rank':>11s}")
+    for rank, i in enumerate(order_cal, 1):
+        name = (planned[i].spec.name or planned[i].spec.dataset)[:24]
+        moved = "" if order_pre[rank - 1] == i else "  ↕"
+        print(f"{rank:>4d} {name:24s} {planned[i].cost.total:>15.4g} "
+              f"{preset[i].cost.total:>12.4g} {order_pre.index(i) + 1:>11d}{moved}")
 
 
 def _finish(args, records, summary: str) -> None:

@@ -119,6 +119,32 @@ def test_spec_json_round_trip_with_partitioner_and_stop():
     )
 
 
+def test_spec_and_report_predate_comm_ledger():
+    """PR 5 back-compat, alongside the hash tests above: spec JSON and
+    report JSON written before the comm plane existed (no comm_timing /
+    comm_ledger keys) load with defaults, and a default spec's dict —
+    hence its content hash, checkpoints, and sweep resume dirs — is
+    byte-identical to the pre-ledger layout."""
+    spec = hybrid_spec(name="pre-ledger")
+    d = spec.to_dict()
+    assert "comm_timing" not in d and "comm_ledger" not in d
+    assert ExperimentSpec.from_dict(d) == spec
+    assert ExperimentSpec.from_dict(d).content_hash() == spec.content_hash()
+    # a timed spec round-trips and moves the hash (resume dirs never
+    # mix timed with untimed runs)
+    timed = dataclasses.replace(spec, comm_timing=True)
+    assert ExperimentSpec.from_json(timed.to_json()) == timed
+    assert timed.content_hash() != spec.content_hash()
+    # pre-ledger report JSON: rehydrates with ledger=None
+    from repro.api import RunReport
+
+    rep = run(spec)
+    old = rep.to_dict()
+    del old["comm_ledger"]
+    assert RunReport.from_dict(old).ledger is None
+    assert RunReport.from_dict(rep.to_dict()).ledger == rep.ledger
+
+
 # ---------------- plan: cost-model parity + autotune ----------------
 
 
