@@ -19,23 +19,32 @@ reproducible configs (``python -m repro.launch.sweep --spec
 spec.json``). See docs/api.md.
 """
 
-from repro.api.spec import BACKENDS, ExperimentSpec, MeshSpec, StopPolicy, dataset_stats
-from repro.api.plan import Plan, plan
+from repro.api.spec import (
+    BACKENDS,
+    ExperimentSpec,
+    FaultPolicy,
+    MeshSpec,
+    StopPolicy,
+    dataset_stats,
+)
+from repro.api.plan import Plan, plan, replan_mesh
 from repro.api.report import RunReport, modeled_comm_words
 from repro.api.run import ProblemBundle, build_problem, run
-from repro.api.session import RoundEvent, Session
-from repro.api.sweep import SweepReport, sweep
+from repro.api.session import RoundEvent, Session, autosave_base
+from repro.api.sweep import QuarantineRecord, SweepReport, sweep
 from repro.core.comm import CommLedger
 from repro.costmodel.calibrate import CalPoint, Calibration, calibrate
 
 __all__ = [
     "BACKENDS",
     "ExperimentSpec",
+    "FaultPolicy",
     "MeshSpec",
     "StopPolicy",
     "dataset_stats",
     "Plan",
     "plan",
+    "replan_mesh",
     "RunReport",
     "modeled_comm_words",
     "CommLedger",
@@ -47,6 +56,8 @@ __all__ = [
     "run",
     "RoundEvent",
     "Session",
+    "autosave_base",
+    "QuarantineRecord",
     "SweepReport",
     "sweep",
 ]

@@ -73,6 +73,46 @@ def _autotune_schedule(spec: ExperimentSpec, machine: Machine) -> tuple[Experime
     return dataclasses.replace(spec, schedule=new_sched), s_raw, b_raw
 
 
+def replan_mesh(
+    spec: ExperimentSpec,
+    devices: int,
+    calibration: Calibration | None = None,
+    backend: str | None = None,
+) -> Plan:
+    """Elastic re-planning: the mesh changed size (a preemption lost
+    workers, or capacity arrived) — price every (p_r, p_c) factorization
+    of ``devices`` under the (optionally §6.5-calibrated) Eq. 4 model
+    and return the cheapest point's Plan.
+
+    The winning geometry is written into both the mesh and the schedule
+    (``schedule.p_r`` follows ``mesh.p_r``: row teams are a numerical
+    knob, so an elastic resume at a different p_r continues the
+    *optimization*, not the bitwise trajectory — the Session layer
+    guarantees bitwise resumption only at an unchanged mesh). Pure
+    planning: nothing is built or run — ``Session.restore_elastic``
+    does the rebuild/remap."""
+    devices = int(devices)
+    if devices < 1:
+        raise ValueError(f"replan_mesh needs ≥ 1 device, got {devices}")
+    best: Plan | None = None
+    for p_r in range(1, devices + 1):
+        if devices % p_r:
+            continue
+        p_c = devices // p_r
+        cand = dataclasses.replace(
+            spec,
+            schedule=dataclasses.replace(spec.schedule, p_r=p_r, p_c=p_c),
+            mesh=dataclasses.replace(
+                spec.mesh, p_r=p_r, p_c=p_c,
+                backend=backend if backend is not None else spec.mesh.backend,
+            ),
+        )
+        pl = plan(cand, calibration=calibration)
+        if best is None or pl.cost.total < best.cost.total:
+            best = pl
+    return best
+
+
 def plan(spec: ExperimentSpec, calibration: Calibration | None = None) -> Plan:
     """Cost-model the spec (and auto-tune it when asked). Pure planning:
     nothing is built, placed, or run — safe as a CI dry-run.

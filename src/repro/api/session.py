@@ -34,25 +34,35 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.plan import Plan, plan
+from repro.api.plan import Plan, plan, replan_mesh
 from repro.api.report import RunReport, modeled_comm_words
-from repro.api.spec import ExperimentSpec
+from repro.api.spec import ExperimentSpec, MeshSpec
+from repro.core import faults
 from repro.core.comm import MESH, TIMED, CommLedger
 from repro.core.engine import engine_comm_ledger, engine_loss, run_engine_chunk
 from repro.core.distributed import HybridDriver
 from repro.core.problem import problem_loss
 from repro.core.teams import global_problem
 from repro.train.checkpoint import (
+    SessionCheckpoint,
     load_session_checkpoint,
     save_session_checkpoint,
 )
 
-__all__ = ["RoundEvent", "Session"]
+__all__ = ["RoundEvent", "Session", "autosave_base"]
+
+
+def autosave_base(directory: str | Path, spec: ExperimentSpec) -> Path:
+    """Where a session autosaves inside ``directory`` — keyed by the
+    spec's content hash (dot-free stem: the checkpoint layer appends
+    .npz/.json via with_suffix)."""
+    return Path(directory) / f"autosave-{spec.content_hash()}"
 
 
 @dataclasses.dataclass
@@ -99,11 +109,17 @@ class Session:
     read of it.
     """
 
-    def __init__(self, spec: ExperimentSpec, x0: np.ndarray | None = None):
+    def __init__(
+        self,
+        spec: ExperimentSpec,
+        x0: np.ndarray | None = None,
+        autosave_dir: str | Path | None = None,
+    ):
         # imported here: repro.api.run imports Session for its thin
         # run() wrapper, so the build machinery import must be lazy.
         from repro.api.run import build_problem, _make_device_mesh
 
+        self.autosave_dir = Path(autosave_dir) if autosave_dir is not None else None
         self.input_spec = spec          # pre-plan (what checkpoints key on)
         self._plan: Plan = plan(spec)
         self.spec = self._plan.spec     # post-autotune (what executes)
@@ -228,12 +244,24 @@ class Session:
 
         loss = None
         synced = False
+        autosave_every = self.input_spec.faults.autosave_every
+        autosaving = self.autosave_dir is not None and autosave_every > 0
         t0 = time.perf_counter()
         while k > 0 and self.stop_reason is None:
             if sched.loss_every:
                 sub = min(k, sched.loss_every - self.rounds_done % sched.loss_every)
             else:
                 sub = k
+            if autosaving:
+                # split at autosave boundaries too, so a cadence finer
+                # than loss_every still checkpoints on time (chunk size
+                # never changes the iterates).
+                sub = min(sub, autosave_every - self.rounds_done % autosave_every)
+            if faults.active() is not None:
+                # under an installed fault plan every round is a
+                # boundary, so planned events fire exactly at their
+                # round index on either backend.
+                sub = 1
             first = self._first_chunk_pending
             tc = time.perf_counter()
             self._advance(sub)
@@ -256,6 +284,11 @@ class Session:
             self._check_stop(
                 sampled, wall=self.wall_time_s + (time.perf_counter() - t0)
             )
+            if autosaving and self.rounds_done % autosave_every == 0:
+                # preemption-safe: the carry is durable at this boundary
+                # *before* the seam below may kill/stall/fail the worker.
+                self.save(self.autosave_path)
+            faults.poke("round", at=self.rounds_done)
         if not synced:
             self.current_x()  # block: wall covers all dispatched work
         self.wall_time_s += time.perf_counter() - t0
@@ -320,6 +353,16 @@ class Session:
 
     # ---- checkpoint / resume ----
 
+    @property
+    def autosave_path(self) -> Path:
+        """Where this session autosaves (``autosave_dir`` keyed by the
+        input spec's content hash); raises when no dir was given."""
+        if self.autosave_dir is None:
+            raise ValueError(
+                "session has no autosave_dir — pass Session(spec, autosave_dir=...)"
+            )
+        return autosave_base(self.autosave_dir, self.input_spec)
+
     def save(self, path) -> None:
         """Checkpoint the session carry at the current round boundary
         (atomic; keyed by the input spec's content hash)."""
@@ -335,32 +378,94 @@ class Session:
         )
 
     @classmethod
-    def restore(cls, path, spec: ExperimentSpec | None = None) -> "Session":
+    def restore(
+        cls,
+        path,
+        spec: ExperimentSpec | None = None,
+        autosave_dir: str | Path | None = None,
+    ) -> "Session":
         """Reopen a saved session and fast-forward to its round.
 
         With ``spec`` given, its ``content_hash()`` must equal the hash
         the checkpoint was written under (``SpecMismatchError``
-        otherwise) — resuming under a different experiment is always a
-        hard error. With ``spec`` omitted, the spec is rebuilt from the
-        checkpoint itself.
+        otherwise — the message names both hashes and the first
+        differing spec field) — resuming under a different experiment is
+        always a hard error. With ``spec`` omitted, the spec is rebuilt
+        from the checkpoint itself.
 
         The restored session continues the identical round sequence:
         the round counter is part of the carry, so rounds r, r+1, …
         sample exactly what the uninterrupted run would have.
         """
-        expect = spec.content_hash() if spec is not None else None
-        ck = load_session_checkpoint(path, expect_spec_hash=expect)
+        ck = load_session_checkpoint(
+            path,
+            expect_spec_hash=spec.content_hash() if spec is not None else None,
+            expect_spec_dict=spec.to_dict() if spec is not None else None,
+        )
         restored_spec = (
             spec if spec is not None else ExperimentSpec.from_dict(ck.spec_dict)
         )
-        sess = cls(restored_spec, x0=ck.x)
+        sess = cls(restored_spec, x0=ck.x, autosave_dir=autosave_dir)
+        return cls._fast_forward(sess, ck)
+
+    @classmethod
+    def restore_elastic(
+        cls,
+        path,
+        devices: int | None = None,
+        mesh: MeshSpec | None = None,
+        calibration=None,
+        autosave_dir: str | Path | None = None,
+    ) -> "Session":
+        """Reopen a saved session on a *different* mesh — the elastic
+        door for shrink/grow after a preemption.
+
+        Exactly one of ``devices`` / ``mesh`` picks the new geometry:
+        with ``devices``, ``replan_mesh`` prices every (p_r, p_c)
+        factorization under the (optionally §6.5-``calibration``-fitted)
+        cost model and the cheapest wins; with ``mesh``, that geometry
+        is used as given. The checkpoint's weights are re-scattered onto
+        the new layout (the ELL shards are rebuilt for the new
+        partition when the session constructs its problem), the loss
+        trace and round counter carry over, and the run continues from
+        the last round boundary.
+
+        At an *unchanged* mesh this is exactly ``restore`` (bitwise-
+        identical continuation). At a changed p_c the numerics are
+        unchanged by construction (p_c is communication-only); a changed
+        p_r re-teams the rows, so the resumed trajectory is a different
+        — equally valid — member of the (p_r, p_c, s, τ) family that
+        converges to the same objective, not a bitwise replay.
+        """
+        if (devices is None) == (mesh is None):
+            raise ValueError("restore_elastic needs exactly one of devices= / mesh=")
+        ck = load_session_checkpoint(path)  # deliberately un-keyed: elastic
+        old_spec = ExperimentSpec.from_dict(ck.spec_dict)
+        if mesh is None:
+            new_spec = replan_mesh(old_spec, devices, calibration=calibration).spec
+        else:
+            new_spec = dataclasses.replace(
+                old_spec,
+                schedule=dataclasses.replace(
+                    old_spec.schedule, p_r=mesh.p_r, p_c=mesh.p_c
+                ),
+                mesh=mesh,
+            )
+        sess = cls(new_spec, x0=ck.x, autosave_dir=autosave_dir)
+        return cls._fast_forward(sess, ck)
+
+    @staticmethod
+    def _fast_forward(sess: "Session", ck: SessionCheckpoint) -> "Session":
+        """Advance a freshly built session's counters to the checkpoint:
+        round counter (part of the carry — the sample sequence
+        continues exactly), loss-trace prefix, and accumulated wall.
+        The counted-comm side of the ledger fast-forwards too (the run,
+        as opposed to this process, has communicated ck.rounds_done
+        rounds' worth); measured per-round seconds stay per-process — a
+        fresh process recompiles and re-times."""
         sess.rounds_done = ck.rounds_done
         if sess._driver is not None:
             sess._driver.rounds_done = ck.rounds_done
-        # the run (as opposed to this process) has communicated
-        # ck.rounds_done rounds' worth — fast-forward the counted side;
-        # measured per-round seconds stay per-process (a fresh process
-        # recompiles and re-times).
         sess.ledger.rounds = ck.rounds_done
         sess.losses = [float(v) for v in ck.losses]
         sess.wall_time_s = ck.wall_time_s

@@ -80,6 +80,45 @@ class StopPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """How a run survives failures — the knobs of the fault-tolerance
+    plane (autosave cadence, retry budget, backoff), declared on the
+    spec so a sweep point carries its own recovery contract.
+
+    autosave_every  checkpoint the session every this many rounds
+                    (0 = off). The *where* is runtime state, not spec
+                    content: ``Session(spec, autosave_dir=...)`` or the
+                    sweep's ``resume_dir`` supply the directory.
+    max_retries     how many times a failed sweep point is retried
+                    (each retry resumes from the point's last autosave
+                    when one exists) before it is quarantined — i.e.
+                    quarantine-after-N with N = 1 + max_retries failed
+                    attempts.
+    backoff_s       sleep before retry k: ``backoff_s · 2^(k-1)``
+                    (0 = retry immediately).
+    """
+
+    autosave_every: int = 0
+    max_retries: int = 2
+    backoff_s: float = 0.0
+
+    def __post_init__(self):
+        if self.autosave_every < 0:
+            raise ValueError(f"autosave_every={self.autosave_every} must be ≥ 0")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries={self.max_retries} must be ≥ 0")
+        if not math.isfinite(self.backoff_s) or self.backoff_s < 0:
+            raise ValueError(f"backoff_s={self.backoff_s} must be finite and ≥ 0")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultPolicy":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class MeshSpec:
     """Where the computation runs.
 
@@ -153,6 +192,10 @@ class ExperimentSpec:
                  land in the report's CommLedger — the §6.5 calibration
                  input (repro.costmodel.calibrate). Serializes per-round
                  dispatch, so leave False for throughput runs.
+    faults       fault-tolerance policy (``FaultPolicy``): autosave
+                 cadence + sweep retry/quarantine budget. The default
+                 (no autosave, 2 retries) serializes to nothing, so
+                 default hashes are unchanged.
     name         optional label for reports/sweeps.
     """
 
@@ -167,6 +210,7 @@ class ExperimentSpec:
     objective: str = "logistic"
     l2: float = 0.0
     comm_timing: bool = False
+    faults: FaultPolicy = dataclasses.field(default_factory=FaultPolicy)
     name: str = ""
 
     def __post_init__(self):
@@ -228,6 +272,10 @@ class ExperimentSpec:
         # every pre-ledger release.
         if self.comm_timing:
             d["comm_timing"] = True
+        # faults likewise: a default policy is invisible on the wire —
+        # pre-fault-tolerance JSON and hashes stay valid.
+        if self.faults != FaultPolicy():
+            d["faults"] = self.faults.to_dict()
         return d
 
     @classmethod
@@ -236,7 +284,8 @@ class ExperimentSpec:
         schedule = ParallelSGDSchedule(**d.pop("schedule"))
         mesh = MeshSpec.from_dict(d.pop("mesh", {}))
         stop = StopPolicy.from_dict(d.pop("stop", {}))
-        return cls(schedule=schedule, mesh=mesh, stop=stop, **d)
+        fault_policy = FaultPolicy.from_dict(d.pop("faults", {}))
+        return cls(schedule=schedule, mesh=mesh, stop=stop, faults=fault_policy, **d)
 
     def to_json(self, indent: int = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent)

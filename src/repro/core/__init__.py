@@ -41,6 +41,14 @@ from repro.core.comm import (
     CommLedger,
     CommRate,
 )
+from repro.core.faults import (
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    TransientIOError,
+    WorkerKilled,
+)
 from repro.core.objective import (
     LOGISTIC,
     OBJECTIVES,
@@ -92,6 +100,12 @@ __all__ = [
     "CommRate",
     "engine_comm_ledger",
     "hybrid_comm_ledger",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
+    "InjectedFault",
+    "TransientIOError",
+    "WorkerKilled",
     "LOGISTIC",
     "OBJECTIVES",
     "Objective",

@@ -22,8 +22,11 @@ dataset materialization (the CI smoke path). ``--resume DIR`` persists
 each finished point's report under DIR keyed by spec content hash:
 interrupt the sweep anywhere (Ctrl-C, preemption, ``--max-points``)
 and re-invoke with the same ``--resume`` to continue — finished points
-are rehydrated, never re-run. ``--table`` prints the paper-style
-time-to-loss table (§7.5) over the collected reports.
+are rehydrated, never re-run. A point that keeps failing is retried per
+its spec's ``FaultPolicy`` and then quarantined (``[quar ]`` line; the
+record lands in the ``--out`` dump) while the rest of the sweep
+completes. ``--table`` prints the paper-style time-to-loss table (§7.5)
+over the collected reports.
 
 The communication loop closes here too: ``--timed`` runs every spec
 with the timed collectives (per-round wall seconds land in each
@@ -95,7 +98,9 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--plan-only", action="store_true",
                     help="cost-model only — no build, no devices, no training")
     ap.add_argument("--out", type=Path, default=None,
-                    help="write reports (JSON list) here")
+                    help="write results here (plan-only: a JSON list of plan "
+                         "records; run: the full SweepReport dump, quarantine "
+                         "records included)")
     ap.add_argument("--resume", type=Path, default=None, metavar="DIR",
                     help="persist finished points here (keyed by spec content "
                          "hash) and skip them on re-invocation")
@@ -171,12 +176,18 @@ def main(argv: list[str] | None = None) -> None:
     for rep, was_resumed in zip(result.reports, result.resumed):
         tag = "skip " if was_resumed else "run  "
         print(f"[{tag}] {rep.summary()}", flush=True)
+    for q in result.quarantined:
+        print(f"[quar ] {q.name} ({q.spec_hash}) quarantined after "
+              f"{q.attempts} attempt(s) at round {q.rounds_done}: {q.error}",
+              flush=True)
     for h in result.skipped:
         print(f"[defer] point {h} not reached (--max-points); re-invoke with "
               f"--resume to finish", flush=True)
     if args.table and result.reports:
         print(result.time_to_loss_table(target=args.target_loss))
-    _finish(args, result.to_dict()["reports"], result.summary())
+    # the full SweepReport dict (reports + quarantine records) is the
+    # artifact CI uploads; _report_dicts/--calibrate accept this shape.
+    _finish(args, result.to_dict(), result.summary())
 
 
 def _print_reranked(planned, preset) -> None:

@@ -13,14 +13,27 @@ No external deps (no orbax). Two layers:
   counter. The hash keys the checkpoint: restoring under a spec whose
   ``content_hash()`` differs is a hard ``SpecMismatchError`` — a
   checkpoint is only ever resumed into the exact experiment that wrote
-  it.
+  it (elastic resume is an explicit, separate door:
+  ``Session.restore_elastic``).
 
-Everything is atomic via write-to-temp + rename.
+Durability contract (the chaos tests in tests/chaos/ enforce it):
+
+* writes are atomic — both files land via write-to-temp + rename, and
+  a failure anywhere in the write phase (including an injected fault in
+  the ``repro.core.faults`` "commit" window) leaves the destination
+  untouched and no temp files behind;
+* the manifest carries a sha256 of the payload and of itself, so a
+  truncated/torn .npz, a flipped byte, or a crash between the two
+  renames is *detected* on load — every corruption path raises a typed
+  ``CheckpointCorruptError`` naming the offending file, never a raw
+  zipfile/JSON traceback (checkpoints written before the hashes existed
+  still load; they just skip the integrity check).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 from pathlib import Path
@@ -28,19 +41,133 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.core import faults
+
 
 class SpecMismatchError(ValueError):
     """A session checkpoint was opened under a different spec."""
 
 
+class CheckpointCorruptError(ValueError):
+    """A checkpoint on disk is unreadable or inconsistent — truncated
+    payload, garbled/missing manifest, failed integrity hash, or the
+    leftovers of an interrupted save."""
+
+
+def _sha256_file(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _manifest_digest(manifest: dict) -> str:
+    body = {k: v for k, v in manifest.items() if k != "manifest_sha256"}
+    payload = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
 def _write_atomic(path: Path, npz_payload: dict, manifest: dict) -> None:
+    """Commit (payload, manifest) under ``path`` (.npz/.json pair).
+
+    Temps first, then two renames. The window between the renames is
+    irreducible with two files, but never silent: the manifest's
+    ``npz_sha256`` won't match a payload from a different save, so a
+    crash there reads back as ``CheckpointCorruptError``, not as a
+    plausible-but-wrong checkpoint. Any failure before the first rename
+    (the ``faults`` "commit" site sits there) leaves the previous
+    checkpoint intact and no temp files."""
+    path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    tmp = path.with_suffix(".tmp.npz")
-    np.savez(tmp, **npz_payload)
-    tmp_manifest = path.with_suffix(".tmp.json")
-    tmp_manifest.write_text(json.dumps(manifest))
-    os.replace(tmp, path.with_suffix(".npz"))
-    os.replace(tmp_manifest, path.with_suffix(".json"))
+    tmp_npz = path.with_suffix(".tmp.npz")
+    tmp_json = path.with_suffix(".tmp.json")
+    try:
+        np.savez(tmp_npz, **npz_payload)
+        manifest = dict(manifest)
+        manifest["npz_sha256"] = _sha256_file(tmp_npz)
+        manifest["manifest_sha256"] = _manifest_digest(manifest)
+        tmp_json.write_text(json.dumps(manifest))
+        faults.poke("commit", at=int(manifest.get("rounds_done", 0)), path=tmp_npz)
+        os.replace(tmp_npz, path.with_suffix(".npz"))
+        os.replace(tmp_json, path.with_suffix(".json"))
+    except BaseException:
+        tmp_npz.unlink(missing_ok=True)
+        tmp_json.unlink(missing_ok=True)
+        raise
+
+
+def _read_manifest(manifest_path: Path, npz_path: Path) -> dict:
+    """Parse + integrity-check a checkpoint manifest; verify the payload
+    hash when the manifest carries one."""
+    try:
+        meta = json.loads(manifest_path.read_text())
+    except (json.JSONDecodeError, UnicodeDecodeError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"{manifest_path}: garbled checkpoint manifest ({e})"
+        ) from e
+    if not isinstance(meta, dict):
+        raise CheckpointCorruptError(
+            f"{manifest_path}: checkpoint manifest is not an object"
+        )
+    stored = meta.get("manifest_sha256")
+    if stored is not None and _manifest_digest(meta) != stored:
+        raise CheckpointCorruptError(
+            f"{manifest_path}: manifest integrity hash mismatch — the manifest "
+            f"was modified after it was written"
+        )
+    expected = meta.get("npz_sha256")
+    if expected is not None:
+        actual = _sha256_file(npz_path)
+        if actual != expected:
+            raise CheckpointCorruptError(
+                f"{npz_path}: payload integrity hash mismatch (truncated or torn "
+                f"write, or a manifest from a different save)"
+            )
+    return meta
+
+
+def _load_npz(npz_path: Path):
+    try:
+        return np.load(npz_path)
+    except Exception as e:  # zipfile/pickle/OS errors — never surfaced raw
+        raise CheckpointCorruptError(
+            f"{npz_path}: unreadable checkpoint payload ({e})"
+        ) from e
+
+
+def _require_pair(path: Path) -> tuple[Path, Path]:
+    """Resolve the (.npz, .json) pair; distinguish 'never written'
+    (FileNotFoundError) from 'a save was interrupted here'
+    (CheckpointCorruptError: half a pair, or only .tmp.* leftovers)."""
+    path = Path(path)
+    npz, manifest = path.with_suffix(".npz"), path.with_suffix(".json")
+    if npz.exists() and manifest.exists():
+        return npz, manifest
+    stale = [p for p in (path.with_suffix(".tmp.npz"), path.with_suffix(".tmp.json"))
+             if p.exists()]
+    partial = [p for p in (npz, manifest) if p.exists()]
+    if partial or stale:
+        found = ", ".join(str(p) for p in partial + stale)
+        raise CheckpointCorruptError(
+            f"{path}: interrupted save — found {found} but no complete "
+            f"checkpoint pair"
+        )
+    raise FileNotFoundError(f"no session checkpoint at {path}(.npz/.json)")
+
+
+def _first_spec_diff(ck: dict, ours: dict, prefix: str = "") -> str | None:
+    """First differing field between two spec dicts, depth-first in key
+    order — the human-readable half of a SpecMismatchError."""
+    for key in sorted(set(ck) | set(ours)):
+        a, b = ck.get(key, "<absent>"), ours.get(key, "<absent>")
+        if isinstance(a, dict) and isinstance(b, dict):
+            sub = _first_spec_diff(a, b, prefix=f"{prefix}{key}.")
+            if sub is not None:
+                return sub
+        elif a != b:
+            return f"{prefix}{key}: checkpoint has {a!r}, session has {b!r}"
+    return None
 
 
 # ---------------- pytree checkpoints (NN training loop) ----------------
@@ -61,18 +188,24 @@ def save_checkpoint(path: str | os.PathLike, tree, step: int) -> None:
 
 def restore_checkpoint(path: str | os.PathLike, tree_like):
     """Restore into the structure of ``tree_like``; returns (tree, step)
-    or (None, 0) if absent."""
+    or (None, 0) if absent. Corruption (truncated npz, garbled manifest)
+    raises ``CheckpointCorruptError``, never a raw traceback."""
     path = Path(path)
     npz, manifest = path.with_suffix(".npz"), path.with_suffix(".json")
     if not npz.exists() or not manifest.exists():
         return None, 0
-    data = np.load(npz)
-    meta = json.loads(manifest.read_text())
+    meta = _read_manifest(manifest, npz)
+    data = _load_npz(npz)
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     new_leaves = []
     for path_elems, leaf in leaves_with_path:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems)
-        arr = data[key]
+        try:
+            arr = data[key]
+        except KeyError as e:
+            raise CheckpointCorruptError(
+                f"{npz}: checkpoint payload is missing key {key!r}"
+            ) from e
         if arr.shape != leaf.shape:
             raise ValueError(f"checkpoint shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
         new_leaves.append(arr.astype(np.asarray(leaf).dtype))
@@ -121,37 +254,67 @@ def save_session_checkpoint(
         "x": np.asarray(x),
         "losses": np.asarray(losses, np.float32),
     }
-    _write_atomic(Path(path), payload, manifest)
+    path = Path(path)
+    _write_atomic(path, payload, manifest)
+    # chaos seam: a "save"-site ckpt_truncate tears the durable payload
+    # here — the integrity hash must catch it on the next restore.
+    faults.poke("save", at=int(rounds_done), path=path.with_suffix(".npz"))
 
 
 def load_session_checkpoint(
-    path: str | os.PathLike, expect_spec_hash: str | None = None
+    path: str | os.PathLike,
+    expect_spec_hash: str | None = None,
+    expect_spec_dict: dict | None = None,
 ) -> SessionCheckpoint:
     """Load a session checkpoint; with ``expect_spec_hash``, refuse
     (``SpecMismatchError``) if the checkpoint was written under a
-    different spec."""
+    different spec. ``expect_spec_dict`` (the expecting spec's
+    ``to_dict()``) upgrades that error from bare hashes to the first
+    differing spec field."""
     path = Path(path)
-    npz, manifest = path.with_suffix(".npz"), path.with_suffix(".json")
-    if not npz.exists() or not manifest.exists():
-        raise FileNotFoundError(f"no session checkpoint at {path}(.npz/.json)")
-    meta = json.loads(manifest.read_text())
+    npz, manifest = _require_pair(path)
+    meta = _read_manifest(manifest, npz)
     if meta.get("format") != _SESSION_FORMAT:
-        raise ValueError(
+        raise CheckpointCorruptError(
             f"{path}: not a session checkpoint (format={meta.get('format')!r})"
         )
-    if expect_spec_hash is not None and meta["spec_hash"] != expect_spec_hash:
+    if expect_spec_hash is not None and meta.get("spec_hash") != expect_spec_hash:
+        detail = ""
+        if expect_spec_dict is not None and isinstance(meta.get("spec"), dict):
+            diff = _first_spec_diff(meta["spec"], expect_spec_dict)
+            detail = (
+                f"; first differing field — {diff}"
+                if diff is not None
+                else "; spec fields agree — the hash inputs drifted"
+            )
         raise SpecMismatchError(
-            f"{path}: checkpoint was written under spec hash {meta['spec_hash']} "
-            f"but the session's spec hashes to {expect_spec_hash} — a checkpoint "
-            f"only resumes into the exact spec that wrote it"
+            f"{path}: checkpoint was written under spec hash "
+            f"{meta.get('spec_hash')} but the session's spec hashes to "
+            f"{expect_spec_hash}{detail} — a checkpoint only resumes into the "
+            f"exact spec that wrote it (use Session.restore_elastic to re-shape "
+            f"a run deliberately)"
         )
-    data = np.load(npz)
-    return SessionCheckpoint(
-        spec_dict=meta["spec"],
-        spec_hash=meta["spec_hash"],
-        rounds_done=int(meta["rounds_done"]),
-        x=data["x"],
-        losses=data["losses"],
-        wall_time_s=float(meta["wall_time_s"]),
-        compile_time_s=float(meta["compile_time_s"]),
-    )
+    data = _load_npz(npz)
+    try:
+        x, losses = data["x"], data["losses"]
+        return SessionCheckpoint(
+            spec_dict=meta["spec"],
+            spec_hash=meta["spec_hash"],
+            rounds_done=int(meta["rounds_done"]),
+            x=x,
+            losses=losses,
+            wall_time_s=float(meta["wall_time_s"]),
+            compile_time_s=float(meta["compile_time_s"]),
+        )
+    except KeyError as e:
+        raise CheckpointCorruptError(
+            f"{path}: checkpoint is missing field {e.args[0]!r}"
+        ) from e
+
+
+def discard_session_checkpoint(path: str | os.PathLike) -> None:
+    """Remove a session checkpoint (durable pair + any stale temps) —
+    what retry logic does with a checkpoint that failed to load."""
+    path = Path(path)
+    for suffix in (".npz", ".json", ".tmp.npz", ".tmp.json"):
+        path.with_suffix(suffix).unlink(missing_ok=True)

@@ -1,0 +1,40 @@
+"""Shared subprocess driver for the chaos harness.
+
+Chaos tests run their victims in subprocesses for two reasons: a hard
+``kill`` event SIGKILLs the process it fires in (the parent must stay
+alive to assert on the wreckage), and shard_map victims need
+``XLA_FLAGS=--xla_force_host_platform_device_count`` set before jax
+initializes — which must not leak into the main pytest process (it has
+to see exactly one device; see tests/conftest.py).
+"""
+
+import signal
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent.parent
+
+SIGKILLED = -int(signal.SIGKILL)
+
+
+def run_chaos(body: str, devices: int = 1, expect_returncode: int = 0) -> str:
+    """Run ``body`` in a fresh interpreter with ``devices`` forced host
+    devices; assert the exit status (``SIGKILLED`` for victims that are
+    supposed to die) and return stdout."""
+    code = textwrap.dedent(body)
+    env = {
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+        "PYTHONPATH": str(REPO / "src"),
+        "PATH": "/usr/bin:/bin:/usr/local/bin",
+        "JAX_PLATFORMS": "cpu",
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=600
+    )
+    assert proc.returncode == expect_returncode, (
+        f"expected exit {expect_returncode}, got {proc.returncode}\n"
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    return proc.stdout

@@ -1,0 +1,172 @@
+"""Property tests for checkpoint round-trips (hypothesis).
+
+``hypothesis`` is an optional dev dependency: when it is absent the
+stub in tests/conftest.py turns every @given test into a clean skip, so
+these modules must keep all strategy *composition* out of module scope
+(plain ``st.integers(...)`` arguments only — the stub returns None for
+them, which @given never inspects).
+
+Properties:
+
+* restore(save(state)) == state, field for field, bitwise on arrays —
+  for arbitrary round counts, array sizes, and contents;
+* any single-byte flip inside the manifest's content is detected
+  (``CheckpointCorruptError``) or — when the flip only rewrites
+  JSON whitespace — loads back the identical state; it never loads
+  *different* state silently;
+* any truncation of the payload is detected;
+* a checkpoint saved under one spec never loads under a spec whose
+  content hash differs (``SpecMismatchError``), for arbitrary
+  FaultPolicy/StopPolicy perturbations.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import ExperimentSpec, FaultPolicy, MeshSpec
+from repro.core import ParallelSGDSchedule
+from repro.train.checkpoint import (
+    CheckpointCorruptError,
+    SpecMismatchError,
+    load_session_checkpoint,
+    save_session_checkpoint,
+)
+
+
+def _spec(autosave_every=0, max_retries=2, eta=0.05):
+    sched = ParallelSGDSchedule.hybrid(2, 2, 4, eta, 8, rounds=4, loss_every=2)
+    return ExperimentSpec(
+        dataset="rcv1-sm",
+        schedule=sched,
+        mesh=MeshSpec(p_r=2, p_c=1),
+        faults=FaultPolicy(autosave_every=autosave_every, max_retries=max_retries),
+        name="props",
+    )
+
+
+def _save(base, spec, rng, rounds, n, n_losses):
+    x = rng.standard_normal(n).astype(np.float32)
+    losses = rng.standard_normal(n_losses).astype(np.float32)
+    save_session_checkpoint(
+        base,
+        spec_dict=spec.to_dict(),
+        spec_hash=spec.content_hash(),
+        rounds_done=rounds,
+        x=x,
+        losses=losses,
+        wall_time_s=float(rng.random()),
+        compile_time_s=float(rng.random()),
+    )
+    return x, losses
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=1, max_value=512),
+    st.integers(min_value=0, max_value=64),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_session_checkpoint_roundtrip(tmp_path_factory, rounds, n, n_losses, seed):
+    base = tmp_path_factory.mktemp("props") / "ck"
+    spec = _spec()
+    rng = np.random.default_rng(seed)
+    x, losses = _save(base, spec, rng, rounds, n, n_losses)
+    ck = load_session_checkpoint(base, expect_spec_hash=spec.content_hash())
+    assert ck.rounds_done == rounds
+    assert ck.spec_hash == spec.content_hash()
+    assert np.array_equal(np.asarray(ck.x), x)
+    assert np.array_equal(np.asarray(ck.losses), losses)
+    assert ExperimentSpec.from_dict(ck.spec_dict) == spec
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.integers(min_value=1, max_value=255),
+)
+def test_manifest_single_byte_flip_never_loads_different_state(
+    tmp_path_factory, seed, pos_seed, xor
+):
+    base = tmp_path_factory.mktemp("flip") / "ck"
+    spec = _spec()
+    rng = np.random.default_rng(seed)
+    x, losses = _save(base, spec, rng, rounds=3, n=16, n_losses=2)
+    manifest = base.with_suffix(".json")
+    raw = bytearray(manifest.read_bytes())
+    idx = int(np.random.default_rng(pos_seed).integers(len(raw)))
+    raw[idx] ^= xor
+    manifest.write_bytes(bytes(raw))
+    try:
+        ck = load_session_checkpoint(base, expect_spec_hash=spec.content_hash())
+    except (CheckpointCorruptError, SpecMismatchError):
+        return  # detected — the property holds
+    # the only acceptable silent outcome: the flip changed nothing
+    # semantic (whitespace-only), so the state is the identical state
+    assert ck.rounds_done == 3
+    assert np.array_equal(np.asarray(ck.x), x)
+    assert np.array_equal(np.asarray(ck.losses), losses)
+    assert ck.spec_dict == spec.to_dict()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.integers(min_value=1, max_value=4096),
+)
+def test_payload_truncation_always_detected(tmp_path_factory, seed, cut):
+    base = tmp_path_factory.mktemp("trunc") / "ck"
+    spec = _spec()
+    rng = np.random.default_rng(seed)
+    _save(base, spec, rng, rounds=1, n=64, n_losses=1)
+    npz = base.with_suffix(".npz")
+    data = npz.read_bytes()
+    npz.write_bytes(data[: max(0, len(data) - cut)])
+    with pytest.raises(CheckpointCorruptError):
+        load_session_checkpoint(base, expect_spec_hash=spec.content_hash())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=20),
+    st.integers(min_value=0, max_value=5),
+    st.floats(min_value=0.01, max_value=0.5, allow_nan=False),
+)
+def test_spec_perturbation_never_resumes(tmp_path_factory, autosave_every, max_retries, eta):
+    base = tmp_path_factory.mktemp("mismatch") / "ck"
+    writer = _spec()
+    rng = np.random.default_rng(0)
+    _save(base, writer, rng, rounds=2, n=8, n_losses=1)
+    reader = _spec(autosave_every=autosave_every, max_retries=max_retries, eta=round(eta, 4))
+    if reader.content_hash() == writer.content_hash():
+        # identical perturbation — must load cleanly instead
+        load_session_checkpoint(base, expect_spec_hash=reader.content_hash())
+        return
+    with pytest.raises(SpecMismatchError):
+        load_session_checkpoint(
+            base,
+            expect_spec_hash=reader.content_hash(),
+            expect_spec_dict=reader.to_dict(),
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=50),
+    st.integers(min_value=0, max_value=10),
+    st.floats(min_value=0.0, max_value=30.0, allow_nan=False),
+)
+def test_fault_policy_dict_roundtrip(autosave_every, max_retries, backoff_s):
+    fp = FaultPolicy(
+        autosave_every=autosave_every, max_retries=max_retries, backoff_s=backoff_s
+    )
+    assert FaultPolicy.from_dict(fp.to_dict()) == fp
+    spec = dataclasses.replace(_spec(), faults=fp)
+    rehydrated = ExperimentSpec.from_dict(json.loads(spec.to_json()))
+    assert rehydrated == spec
+    assert rehydrated.content_hash() == spec.content_hash()

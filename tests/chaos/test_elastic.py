@@ -1,0 +1,174 @@
+"""Elastic re-planning: a checkpoint written on one mesh resumes on
+another.
+
+The contract has three regimes (and the tests pin each one):
+
+* unchanged mesh → ``restore_elastic`` is exactly ``restore``: the
+  continuation is bitwise-identical;
+* changed p_c (communication-only) → the iterates are *still* bitwise-
+  identical — column shards never touch the numerics;
+* changed p_r (a numerical knob) → a different, equally valid member of
+  the (p_r, p_c, s, τ) family: the resumed run must converge to the
+  same target loss, not replay the same bits.
+
+``replan_mesh`` itself is the §5 cost model doing the choosing: every
+factorization of the surviving device count is priced and the cheapest
+becomes the new geometry.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from chaos_util import run_chaos
+from repro.api import (
+    ExperimentSpec,
+    MeshSpec,
+    Session,
+    plan,
+    replan_mesh,
+    run,
+)
+from repro.core import ParallelSGDSchedule
+
+
+def _spec(p_r=4, p_c=1, rounds=8, **over):
+    sched = ParallelSGDSchedule.hybrid(p_r, 2, 4, 0.05, 8, rounds=rounds, loss_every=2)
+    base = dict(
+        dataset="rcv1-sm",
+        schedule=sched,
+        mesh=MeshSpec(p_r=p_r, p_c=p_c),
+        name="elastic",
+    )
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+def test_replan_enumerates_factorizations():
+    spec = _spec()
+    for devices in (1, 2, 4, 6, 8):
+        pl = replan_mesh(spec, devices)
+        assert pl.spec.mesh.p_r * pl.spec.mesh.p_c == devices
+        assert pl.spec.schedule.p_r == pl.spec.mesh.p_r
+        assert pl.spec.schedule.p_c == pl.spec.mesh.p_c
+        # the winner is the argmin over every factorization
+        for p_r in range(1, devices + 1):
+            if devices % p_r:
+                continue
+            cand = dataclasses.replace(
+                spec,
+                schedule=dataclasses.replace(
+                    spec.schedule, p_r=p_r, p_c=devices // p_r
+                ),
+                mesh=dataclasses.replace(spec.mesh, p_r=p_r, p_c=devices // p_r),
+            )
+            assert pl.cost.total <= plan(cand).cost.total + 1e-12
+
+
+def test_replan_rejects_zero_devices():
+    with pytest.raises(ValueError):
+        replan_mesh(_spec(), 0)
+
+
+def test_unchanged_mesh_is_bitwise(tmp_path):
+    spec = _spec()
+    clean = run(spec)
+    half = Session(spec)
+    half.step_rounds(5)  # off every boundary
+    half.save(tmp_path / "ck")
+    rep = Session.restore_elastic(tmp_path / "ck", mesh=spec.mesh).run()
+    assert np.array_equal(rep.x, clean.x)
+    assert np.array_equal(rep.losses, clean.losses)
+
+
+def test_p_c_shrink_is_bitwise(tmp_path):
+    """p_c is communication-only: an elastic resume that only re-shards
+    columns continues the identical iterate sequence."""
+    spec = _spec(p_r=2, p_c=4)
+    clean = run(spec)
+    half = Session(spec)
+    half.step_rounds(3)
+    half.save(tmp_path / "ck")
+    rep = Session.restore_elastic(tmp_path / "ck", mesh=MeshSpec(p_r=2, p_c=2)).run()
+    assert rep.spec.mesh.p_c == 2
+    assert np.array_equal(rep.x, clean.x)
+    assert np.array_equal(rep.losses, clean.losses)
+
+
+def test_p_r_shrink_replans_and_converges(tmp_path):
+    """Mesh shrink 4 → 2 devices mid-run: replan picks a new (p_r, p_c),
+    the run continues from the checkpoint's round, and the re-teamed
+    trajectory still reaches the target the uninterrupted run reached."""
+    probe = run(_spec(rounds=16))
+    target = float(probe.final_loss) * 1.02  # the §7.5 verdict, with slack
+
+    spec = _spec(rounds=16)
+    half = Session(spec)
+    half.step_rounds(6)
+    half.save(tmp_path / "ck")
+
+    sess = Session.restore_elastic(tmp_path / "ck", devices=2)
+    assert sess.spec.mesh.p == 2
+    assert sess.rounds_done == 6
+    assert len(sess.losses) == 3  # the trace carries over
+    rep = sess.run()
+    assert rep.rounds_completed == 16
+    assert rep.final_loss <= target, (rep.final_loss, target)
+
+
+def test_grow_replans(tmp_path):
+    """Capacity arrives: 4 → 8 devices. Same contract, opposite sign."""
+    spec = _spec(rounds=8)
+    half = Session(spec)
+    half.step_rounds(4)
+    half.save(tmp_path / "ck")
+    sess = Session.restore_elastic(tmp_path / "ck", devices=8)
+    assert sess.spec.mesh.p == 8
+    rep = sess.run()
+    assert rep.rounds_completed == 8
+    assert np.isfinite(rep.final_loss)
+
+
+def test_restore_elastic_needs_exactly_one_target(tmp_path):
+    spec = _spec()
+    s = Session(spec)
+    s.step_rounds(2)
+    s.save(tmp_path / "ck")
+    with pytest.raises(ValueError, match="exactly one"):
+        Session.restore_elastic(tmp_path / "ck")
+    with pytest.raises(ValueError, match="exactly one"):
+        Session.restore_elastic(tmp_path / "ck", devices=2, mesh=spec.mesh)
+
+
+def test_elastic_shard_map_p_c_shrink_bitwise(tmp_path):
+    """The same p_c-only elastic contract on a real device mesh: save on
+    2×4, resume on 2×2 — bitwise against the uninterrupted 2×4 run."""
+    out = run_chaos(
+        f"""
+import numpy as np
+from repro.api import ExperimentSpec, MeshSpec, Session, run
+from repro.core import ParallelSGDSchedule
+
+sched = ParallelSGDSchedule.hybrid(2, 2, 4, 0.05, 8, rounds=4, loss_every=2)
+spec = ExperimentSpec(
+    dataset="rcv1-sm",
+    schedule=sched,
+    mesh=MeshSpec(p_r=2, p_c=4, backend="shard_map"),
+    name="elastic-mesh",
+)
+clean = run(spec)
+half = Session(spec)
+half.step_rounds(2)
+half.save(r"{tmp_path}/ck")
+rep = Session.restore_elastic(
+    r"{tmp_path}/ck", mesh=MeshSpec(p_r=2, p_c=2, backend="shard_map")
+).run()
+assert rep.spec.mesh.p_c == 2
+assert np.array_equal(rep.x, clean.x), "p_c shrink changed the iterates"
+assert np.array_equal(rep.losses, clean.losses)
+print("OK")
+""",
+        devices=8,
+    )
+    assert "OK" in out

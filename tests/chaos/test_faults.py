@@ -1,0 +1,122 @@
+"""The chaos seam itself: plans are deterministic, events validate,
+matching/audit semantics are exact, and the seam is inert when nothing
+is installed."""
+
+import pytest
+
+from repro.core.faults import (
+    FAULT_KINDS,
+    FAULT_SITES,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    TransientIOError,
+    WorkerKilled,
+    active,
+    install,
+    poke,
+)
+
+
+def test_plans_from_same_seed_are_identical():
+    a = FaultPlan.from_seed(42, rounds=20)
+    b = FaultPlan.from_seed(42, rounds=20)
+    assert a == b
+    assert a.events  # non-empty
+    assert FaultPlan.from_seed(43, rounds=20) != a
+
+
+def test_string_seed_is_stable():
+    """Seeding from a spec content hash must give the same plan in every
+    process — no PYTHONHASHSEED dependence."""
+    a = FaultPlan.from_seed("c5e2c76d6dea3480", rounds=10)
+    b = FaultPlan.from_seed("c5e2c76d6dea3480", rounds=10)
+    assert a == b
+    for ev in a.events:
+        assert ev.kind in FAULT_KINDS
+        assert ev.site in FAULT_SITES
+        assert 1 <= ev.at < 10
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(kind="meteor")
+    with pytest.raises(ValueError, match="site"):
+        FaultEvent(kind="stall", site="nowhere")
+    with pytest.raises(ValueError, match="times"):
+        FaultEvent(kind="stall", times=0)
+
+
+def test_injector_matches_site_round_and_budget():
+    plan = FaultPlan(
+        events=[
+            FaultEvent(kind="io_error", site="round", at=2, times=2),
+            FaultEvent(kind="stall", site="point", at=0, delay_s=0.0),
+        ]
+    )
+    inj = FaultInjector(plan)
+    inj.poke("round", 1)  # wrong round: nothing
+    inj.poke("save", 2)  # wrong site: nothing
+    with pytest.raises(TransientIOError):
+        inj.poke("round", 2)
+    with pytest.raises(TransientIOError):
+        inj.poke("round", 2)
+    inj.poke("round", 2)  # budget (times=2) spent: inert now
+    inj.poke("point", 0)  # zero-delay stall: fires, returns
+    assert inj.fired == [
+        ("io_error", "round", 2),
+        ("io_error", "round", 2),
+        ("stall", "point", 0),
+    ]
+
+
+def test_transient_error_is_both_oserror_and_injected():
+    # retry logic catches OSError; test oracles catch InjectedFault
+    assert issubclass(TransientIOError, OSError)
+    assert issubclass(TransientIOError, InjectedFault)
+    assert issubclass(WorkerKilled, InjectedFault)
+
+
+def test_soft_kill_raises():
+    inj = FaultInjector(FaultPlan(events=[FaultEvent(kind="kill", at=1)]))
+    with pytest.raises(WorkerKilled):
+        inj.poke("round", 1)
+
+
+def test_ckpt_truncate_shortens_file(tmp_path):
+    victim = tmp_path / "payload.npz"
+    victim.write_bytes(b"x" * 1000)
+    inj = FaultInjector(
+        FaultPlan(events=[FaultEvent(kind="ckpt_truncate", site="save", at=5,
+                                     truncate_bytes=300)])
+    )
+    inj.poke("save", 5, path=victim)
+    assert victim.stat().st_size == 700
+    inj2 = FaultInjector(
+        FaultPlan(events=[FaultEvent(kind="ckpt_truncate", site="save", at=5,
+                                     truncate_bytes=10_000)])
+    )
+    inj2.poke("save", 5, path=victim)
+    assert victim.stat().st_size == 0  # clamped, never negative
+
+
+def test_module_seam_is_inert_without_install():
+    assert active() is None
+    poke("round", 1)  # no-op, no error
+    plan = FaultPlan(events=[FaultEvent(kind="io_error", at=1)])
+    with install(plan) as inj:
+        assert active() is inj
+        with pytest.raises(TransientIOError):
+            poke("round", 1)
+    assert active() is None
+    poke("round", 1)  # inert again after the with-block
+
+
+def test_at_none_fires_every_visit_until_spent():
+    plan = FaultPlan(events=[FaultEvent(kind="stall", at=None, times=2, delay_s=0.0)])
+    with install(plan) as inj:
+        poke("round", 1)
+        poke("round", 7)
+        poke("round", 9)  # spent
+    assert [at for _, _, at in inj.fired] == [1, 7]

@@ -1,0 +1,185 @@
+"""Kill–resume: a worker dies mid-run, a fresh process restores from the
+autosave, and the finished trajectory is bitwise-identical to the
+uninterrupted run — on both backends.
+
+The victim installs a ``FaultPlan`` with a hard ``kill`` event
+(``install(..., hard_kill=True)`` → real SIGKILL between two rounds, so
+nothing after the fault can "clean up"); the resumer is a separate
+process with no memory of the victim. The only channel between them is
+the autosave checkpoint on disk — exactly a preemption.
+"""
+
+import numpy as np
+import pytest
+
+from chaos_util import SIGKILLED, run_chaos
+
+# One spec, two backends. The autosave cadence (every round) plus the
+# kill at round 4 means the victim leaves a round-4 checkpoint behind.
+_SPEC = """
+import dataclasses
+from repro.api import ExperimentSpec, FaultPolicy, MeshSpec
+from repro.core import ParallelSGDSchedule
+
+sched = ParallelSGDSchedule.hybrid(2, 2, 4, 0.05, 8, rounds=6, loss_every=2)
+spec = ExperimentSpec(
+    dataset="rcv1-sm",
+    schedule=sched,
+    mesh=MeshSpec(p_r=2, p_c={p_c}, backend="{backend}"),
+    faults=FaultPolicy(autosave_every=1),
+    name="chaos-kill",
+)
+"""
+
+BACKENDS = [("simulated", 1, 1), ("shard_map", 4, 8)]
+
+
+@pytest.mark.parametrize("backend,p_c,devices", BACKENDS)
+def test_sigkill_between_rounds_resumes_bitwise(backend, p_c, devices, tmp_path):
+    spec_code = _SPEC.format(backend=backend, p_c=p_c)
+
+    # the reference: the same spec, uninterrupted
+    run_chaos(
+        spec_code
+        + f"""
+import numpy as np
+from repro.api import Session
+rep = Session(spec).run()
+np.savez(r"{tmp_path}/clean.npz", x=rep.x, losses=rep.losses)
+print("CLEAN", rep.rounds_completed)
+""",
+        devices=devices,
+    )
+
+    # the victim: autosaves every round, SIGKILLed by the seam at round 4
+    run_chaos(
+        spec_code
+        + f"""
+from repro.api import Session
+from repro.core.faults import FaultEvent, FaultPlan, install
+plan = FaultPlan(events=[FaultEvent(kind="kill", site="round", at=4)])
+with install(plan, hard_kill=True):
+    Session(spec, autosave_dir=r"{tmp_path}").run()
+print("UNREACHABLE")  # SIGKILL means this line never runs
+""",
+        devices=devices,
+        expect_returncode=SIGKILLED,
+    )
+
+    # the resumer: a fresh process, only the autosave to go on
+    out = run_chaos(
+        spec_code
+        + f"""
+import numpy as np
+from repro.api import Session, autosave_base
+sess = Session.restore(autosave_base(r"{tmp_path}", spec), spec=spec)
+assert sess.rounds_done == 4, sess.rounds_done  # the kill landed after the round-4 save
+rep = sess.run()
+clean = np.load(r"{tmp_path}/clean.npz")
+assert np.array_equal(rep.x, clean["x"]), "resumed weights diverged"
+assert np.array_equal(rep.losses, clean["losses"]), "resumed loss trace diverged"
+print("RESUMED-BITWISE", rep.rounds_completed)
+""",
+        devices=devices,
+    )
+    assert "RESUMED-BITWISE 6" in out
+
+
+def test_parent_driven_sigkill_mid_run(tmp_path):
+    """The parent kills the victim from outside (no cooperation from the
+    seam): the victim prints a line per round, the parent SIGKILLs it
+    after seeing round 2, then resumes from whatever autosave survived.
+    Proves recovery doesn't depend on the victim dying at a point of the
+    runtime's choosing."""
+    import os
+    import signal
+    import subprocess
+    import sys
+    import textwrap
+
+    from chaos_util import REPO
+
+    victim = textwrap.dedent(
+        _SPEC.format(backend="simulated", p_c=1)
+        + f"""
+import sys, time
+from repro.api import Session
+from repro.core.faults import FaultEvent, FaultPlan, install
+sess = Session(spec, autosave_dir=r"{tmp_path}")
+# stall every round so the parent's kill always lands mid-run
+plan = FaultPlan(events=[FaultEvent(kind="stall", site="round", at=None,
+                                    times=99, delay_s=0.5)])
+with install(plan):
+    while not sess.done:
+        sess.step_rounds(1)
+        print("ROUND", sess.rounds_done, flush=True)
+"""
+    )
+    env = {
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=1",
+        "PYTHONPATH": str(REPO / "src"),
+        "PATH": "/usr/bin:/bin:/usr/local/bin",
+        "JAX_PLATFORMS": "cpu",
+    }
+    proc = subprocess.Popen(
+        [sys.executable, "-c", victim], stdout=subprocess.PIPE, text=True, env=env
+    )
+    try:
+        rounds_seen = 0
+        for line in proc.stdout:
+            if line.startswith("ROUND"):
+                rounds_seen = int(line.split()[1])
+                if rounds_seen >= 2:
+                    os.kill(proc.pid, signal.SIGKILL)
+                    break
+        proc.wait(timeout=60)
+    finally:
+        proc.kill()
+    assert proc.returncode == SIGKILLED
+    assert rounds_seen >= 2
+
+    out = run_chaos(
+        _SPEC.format(backend="simulated", p_c=1)
+        + f"""
+import numpy as np
+from repro.api import Session, autosave_base, run
+sess = Session.restore(autosave_base(r"{tmp_path}", spec), spec=spec)
+assert sess.rounds_done >= 2, sess.rounds_done
+rep = sess.run()
+clean = run(spec)
+assert np.array_equal(rep.x, clean.x)
+assert np.array_equal(rep.losses, clean.losses)
+print("RESUMED-BITWISE", rep.rounds_completed)
+"""
+    )
+    assert "RESUMED-BITWISE 6" in out
+
+
+def test_soft_kill_in_process(tmp_path):
+    """The in-process flavor (``WorkerKilled`` instead of SIGKILL): same
+    contract, no subprocess — the fast smoke the others generalize."""
+    from repro.api import ExperimentSpec, FaultPolicy, MeshSpec, Session, autosave_base
+    from repro.core import ParallelSGDSchedule
+    from repro.core.faults import FaultEvent, FaultPlan, WorkerKilled, install
+
+    sched = ParallelSGDSchedule.hybrid(2, 2, 4, 0.05, 8, rounds=6, loss_every=2)
+    spec = ExperimentSpec(
+        dataset="rcv1-sm",
+        schedule=sched,
+        mesh=MeshSpec(p_r=2, p_c=1),
+        faults=FaultPolicy(autosave_every=2),
+        name="chaos-soft-kill",
+    )
+    clean = Session(spec).run()
+
+    victim = Session(spec, autosave_dir=tmp_path)
+    plan = FaultPlan(events=[FaultEvent(kind="kill", site="round", at=4)])
+    with install(plan) as inj:
+        with pytest.raises(WorkerKilled):
+            victim.run()
+    assert inj.fired == [("kill", "round", 4)]
+    assert victim.rounds_done == 4
+
+    rep = Session.restore(autosave_base(tmp_path, spec), spec=spec).run()
+    assert np.array_equal(rep.x, clean.x)
+    assert np.array_equal(rep.losses, clean.losses)
