@@ -1,0 +1,160 @@
+"""Serving-plane benchmark: sustained predictions/sec and time-to-adapt.
+
+Two numbers the ISSUE tracks per release (persisted to
+``BENCH_serve.json``; the serve-plane CI job uploads it as an
+artifact, and ROADMAP.md carries the trajectory):
+
+* ``predictions_per_sec`` — sustained throughput of the batched
+  prediction service under concurrent in-process clients (request
+  micro-batching amortizes store reads: many callers, one matvec batch).
+* ``time_to_adapt_rounds`` — after an injected concept flip, how many
+  online rounds until served accuracy against the *new* concept beats
+  accuracy against the old one (the crossover; measured on twin probe
+  streams, trained and served by one process with hot swaps on).
+
+CSV rows (name,us_per_call,derived) go to stdout like every other
+bench module.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+
+OUT_JSON = Path("BENCH_serve.json")
+
+ROUNDS = 120
+DRIFT_AT = 60
+PROBE_EVERY = 6
+
+
+def _spec():
+    from repro.api import ExperimentSpec, MeshSpec, StreamSpec
+    from repro.core.engine import ParallelSGDSchedule
+
+    return ExperimentSpec(
+        dataset="rcv1-sm",
+        schedule=ParallelSGDSchedule.hybrid(
+            p_r=2, s=2, b=4, eta=0.2, tau=8, rounds=ROUNDS, loss_every=0
+        ),
+        mesh=MeshSpec(p_r=2, p_c=1, backend="simulated"),
+        stream=StreamSpec(source="drift", seed=3, drift_at=DRIFT_AT, swap_every=8),
+        name="bench-serve",
+    )
+
+
+def _acc(x: np.ndarray, stream, base: int, probes: int = 4) -> float:
+    vals = []
+    for k in range(probes):
+        b = stream.batch(base + k)
+        m = np.einsum("rw,rw->r", x[b.indices], b.values)
+        vals.append(np.mean(np.where(m >= 0, 1.0, -1.0) == b.y))
+    return float(np.mean(vals))
+
+
+def bench_prediction_throughput(results: dict) -> None:
+    """Sustained predictions/sec: N client threads hammering one
+    service for a fixed window (each request 64 rows)."""
+    from repro.serve import ModelStore, PredictionService
+
+    store = ModelStore()
+    rng = np.random.default_rng(0)
+    store.publish(rng.standard_normal(4736).astype(np.float32))
+    idx = rng.integers(0, 4736, size=(64, 16)).astype(np.int32)
+    val = rng.standard_normal((64, 16)).astype(np.float32)
+
+    window_s = 2.0
+    n_clients = 4
+    with PredictionService(store, max_batch_rows=512, max_wait_s=0.001) as svc:
+        stop = time.monotonic() + window_s
+
+        def client():
+            while time.monotonic() < stop:
+                svc.predict(idx, val)
+
+        threads = [threading.Thread(target=client) for _ in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        stats = svc.stats()
+
+    pps = stats["rows_served"] / elapsed
+    results["predictions_per_sec"] = pps
+    results["mean_batch_rows"] = stats["mean_batch_rows"]
+    results["predict_clients"] = n_clients
+    emit("serve/predictions_per_sec", 1e6 / max(pps, 1e-9), f"{pps:.0f}/s")
+    emit(
+        "serve/mean_coalesced_batch",
+        0.0,
+        f"{stats['mean_batch_rows']:.1f} rows/batch",
+    )
+
+
+def bench_time_to_adapt(results: dict) -> None:
+    """Inject a concept flip mid-stream; report rounds (and seconds)
+    until accuracy-vs-new-concept overtakes accuracy-vs-old."""
+    import dataclasses
+
+    from repro.api import Session
+    from repro.serve import ModelStore, OnlineController, make_stream_source
+
+    spec = _spec()
+    src = make_stream_source(spec)
+    pre = dataclasses.replace(src, drift_at=0)  # always the old concept
+    post = dataclasses.replace(src, drift_at=1)  # always the new one
+
+    sess = Session(spec)
+    ctrl = OnlineController(sess, src, ModelStore())
+    adapt_round = None
+    t_drift = None
+    t0 = time.perf_counter()
+    while sess.rounds_done < ROUNDS:
+        ctrl.run(PROBE_EVERY)
+        r = sess.rounds_done
+        if r >= DRIFT_AT:
+            if t_drift is None:
+                t_drift = time.perf_counter()
+            x = sess.current_x()
+            a_new = _acc(x, post, 90_000 + 10 * r)
+            a_old = _acc(x, pre, 90_000 + 10 * r)
+            if adapt_round is None and a_new > a_old:
+                adapt_round = r
+                break
+    wall = time.perf_counter() - t0
+    rounds_per_sec = sess.rounds_done / max(wall, 1e-9)
+
+    adapted = adapt_round is not None
+    results["time_to_adapt_rounds"] = (adapt_round - DRIFT_AT) if adapted else None
+    results["adapted_within_budget"] = adapted
+    results["train_rounds_per_sec"] = rounds_per_sec
+    results["swaps"] = ctrl.metrics().swaps
+    emit(
+        "serve/time_to_adapt",
+        0.0,
+        f"{results['time_to_adapt_rounds']} rounds post-drift"
+        if adapted
+        else f"no crossover within {ROUNDS - DRIFT_AT} rounds",
+    )
+    emit("serve/train_rounds_per_sec", 1e6 / max(rounds_per_sec, 1e-9),
+         f"{rounds_per_sec:.1f} rounds/s")
+
+
+def run() -> None:
+    results: dict = {"bench": "serve", "rounds": ROUNDS, "drift_at": DRIFT_AT}
+    bench_prediction_throughput(results)
+    bench_time_to_adapt(results)
+    OUT_JSON.write_text(json.dumps(results, indent=2))
+    print(f"# wrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    run()

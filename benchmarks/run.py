@@ -23,6 +23,7 @@ MODULES = {
     "kernels": "benchmarks.bench_kernels",
     "perf-ablation": "benchmarks.bench_perf_ablation",
     "roofline": "benchmarks.bench_roofline",
+    "serve": "benchmarks.bench_serve",
 }
 
 

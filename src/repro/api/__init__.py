@@ -25,6 +25,7 @@ from repro.api.spec import (
     FaultPolicy,
     MeshSpec,
     StopPolicy,
+    StreamSpec,
     dataset_stats,
 )
 from repro.api.plan import Plan, plan, replan_mesh
@@ -41,6 +42,7 @@ __all__ = [
     "FaultPolicy",
     "MeshSpec",
     "StopPolicy",
+    "StreamSpec",
     "dataset_stats",
     "Plan",
     "plan",

@@ -304,6 +304,162 @@ class Session:
             stop=self.stop_reason,
         )
 
+    # ---- the streaming door ----
+
+    def _next_stream_batch(self, source):
+        """One micro-batch from ``source`` — a ``StreamFeed`` (bounded
+        ingest queue; preferred) or a bare ``StreamSource`` (iterated
+        lazily from the current round, re-anchored if swapped)."""
+        if hasattr(source, "get"):  # StreamFeed
+            return source.get()
+        if getattr(self, "_stream_src", None) is not source:
+            self._stream_src = source
+            self._stream_iter = source.micro_batches(self.rounds_done)
+        return next(self._stream_iter)
+
+    def _advance_stream(self, batch) -> None:
+        """Run ONE round over a fresh micro-batch (no loss sampling).
+
+        The batch replaces the resident data for exactly this round:
+        with ``m_local = τ·b`` rows per team, the engine's cyclic bundle
+        slicing walks the fresh rows exactly once at any round index, so
+        streaming reuses the offline round body (and its jit cache —
+        fixed batch shapes compile once) verbatim.
+        """
+        from repro.serve.ingest import (
+            ColumnLocalizer,
+            stream_shard_arrays,
+            stream_team_problem,
+        )
+
+        want = self.spec.stream_rows_per_round()
+        if batch.rows != want:
+            raise ValueError(
+                f"micro-batch has {batch.rows} rows; one round of this schedule "
+                f"consumes p_r·τ·b = {want}"
+            )
+        if self._driver is not None:
+            if getattr(self, "_localizer", None) is None:
+                self._localizer = ColumnLocalizer.from_partition(self.bundle.cp)
+            idx, val = stream_shard_arrays(
+                batch, self._localizer, self.spec.schedule.p_r, batch.width
+            )
+            self._driver.advance_stream(idx, val)  # commits the round
+        else:
+            tp = stream_team_problem(
+                batch,
+                self.spec.schedule.p_r,
+                self.bundle.dataset.A.n,
+                self.bundle.team.objective,
+            )
+            if self.spec.comm_timing:
+                t0 = time.perf_counter()
+                self._x = run_engine_chunk(
+                    tp, self._x, self.rounds_done, 1, self.spec.schedule
+                )
+                jax.block_until_ready(self._x)
+                self.ledger.add_round_seconds(time.perf_counter() - t0)
+            else:
+                self._x = run_engine_chunk(
+                    tp, self._x, self.rounds_done, 1, self.spec.schedule
+                )
+            self.ledger.add_rounds(1)
+        self.rounds_done += 1
+
+    def step_stream(self, source, k: int | None = None) -> RoundEvent:
+        """Advance up to ``k`` rounds (default: to the next loss-sampling
+        boundary, or all remaining budget), each round consuming one
+        fresh micro-batch from ``source``, and return what happened.
+
+        The streaming twin of ``step_rounds`` — same loss-sampling
+        boundaries (the full objective is probed on the spec's resident
+        dataset, which serves as the stream session's holdout — so
+        ``stop.target_loss`` keeps working), same autosave cadence, same
+        StopPolicy and fault seam. What changes is the data: round r
+        trains on micro-batch r instead of the resident rows.
+
+        Exactly-once is structural: ``MicroBatch.index`` must equal the
+        session's round counter (``StreamDesyncError`` otherwise), and a
+        session restored from a round-r autosave re-attaches at batch r
+        — sources replay deterministically, so resume continues the
+        identical sequence with no duplicated or dropped batch.
+        """
+        from repro.serve.stream import StreamDesyncError
+
+        if self.done:
+            raise RuntimeError(
+                f"session is finished ({self.stop_reason or 'rounds'} at round "
+                f"{self.rounds_done}); nothing to step"
+            )
+        sched = self.spec.schedule
+        budget = self.total_rounds
+        if self.spec.stop.max_rounds is not None:
+            budget = min(budget, self.spec.stop.max_rounds)
+        remaining = budget - self.rounds_done
+        if k is None:
+            k = (
+                sched.loss_every - self.rounds_done % sched.loss_every
+                if sched.loss_every
+                else remaining
+            )
+        k = min(int(k), remaining)
+        if k < 1:
+            raise ValueError(f"step_stream needs k ≥ 1, got {k}")
+
+        loss = None
+        synced = False
+        autosave_every = self.input_spec.faults.autosave_every
+        autosaving = self.autosave_dir is not None and autosave_every > 0
+        t0 = time.perf_counter()
+        while k > 0 and self.stop_reason is None:
+            batch = self._next_stream_batch(source)
+            if batch.index != self.rounds_done:
+                raise StreamDesyncError(
+                    f"micro-batch index {batch.index} != session round "
+                    f"{self.rounds_done}: a batch was duplicated, dropped, or "
+                    f"reordered (resume must re-attach the source at "
+                    f"start={self.rounds_done})"
+                )
+            first = self._first_chunk_pending
+            tc = time.perf_counter()
+            self._advance_stream(batch)
+            sampled = None
+            if sched.loss_every and self.rounds_done % sched.loss_every == 0:
+                sampled = self._sample_loss()  # blocks (device → float)
+                self.losses.append(sampled)
+                loss, synced = sampled, True
+            else:
+                synced = False
+            if first:
+                if sampled is None:
+                    self.current_x()  # block: compile wall must be real
+                    synced = True
+                self.compile_time_s += time.perf_counter() - tc
+                self._first_chunk_pending = False
+            k -= 1
+            self._check_stop(
+                sampled, wall=self.wall_time_s + (time.perf_counter() - t0)
+            )
+            if autosaving and self.rounds_done % autosave_every == 0:
+                # the carry AND the stream position (rounds_done) are
+                # durable here — resume re-attaches at this batch index.
+                self.save(self.autosave_path)
+            faults.poke("round", at=self.rounds_done)
+        if not synced:
+            self.current_x()  # block: wall covers all dispatched work
+        self.wall_time_s += time.perf_counter() - t0
+
+        return RoundEvent(
+            rounds_done=self.rounds_done,
+            x=self.current_x(),  # post-sync: a copy, not a timed stall
+            loss=loss,
+            wall_time_s=self.wall_time_s,
+            compile_time_s=self.compile_time_s,
+            comm_words=modeled_comm_words(self.spec, rounds=self.rounds_done),
+            ledger=self.ledger.snapshot(),
+            stop=self.stop_reason,
+        )
+
     def _check_stop(self, loss: float | None, wall: float | None = None) -> None:
         # target_loss is checked first: a crossing on the final budgeted
         # round is still a hit (the §7.5 verdict the benchmarks persist),

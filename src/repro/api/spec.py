@@ -119,6 +119,64 @@ class FaultPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """The spec's declared online data plane (the serving plane's
+    input). One schedule round consumes exactly ``p_r · τ · b`` sample
+    rows, so a stream plugs in by micro-batching arrivals into
+    fixed-shape row blocks of that size (``Session.step_stream``).
+
+    source          "" = no stream (pure offline run — the default, and
+                    invisible on the wire so default hashes are
+                    unchanged); "drift" = synthetic labeled stream with
+                    one concept shift (``repro.serve.DriftStream``);
+                    "replay" = cycle the spec's dataset rows through the
+                    online path (``repro.serve.ReplayStream``).
+    rows_per_round  micro-batch size. 0 (default) derives it from the
+                    schedule (p_r·τ·b); a nonzero value must equal that
+                    product — one batch is one round by construction.
+    width           active features per streamed example ("drift" only).
+    seed            stream seed (independent of the dataset seed).
+    drift_at        batch index of the concept shift (0 = never).
+    queue_capacity  ingest queue bound (backpressure point).
+    swap_every      serving freshness policy: hot-swap the served model
+                    every this many rounds (0 = only the final swap).
+    """
+
+    source: str = ""
+    rows_per_round: int = 0
+    width: int = 16
+    seed: int = 0
+    drift_at: int = 0
+    queue_capacity: int = 8
+    swap_every: int = 4
+
+    def __post_init__(self):
+        if self.source not in ("", "drift", "replay"):
+            raise ValueError(
+                f"stream.source={self.source!r} not in ('', 'drift', 'replay')"
+            )
+        if self.rows_per_round < 0:
+            raise ValueError(f"rows_per_round={self.rows_per_round} must be ≥ 0")
+        if self.width < 1:
+            raise ValueError(f"stream.width={self.width} must be ≥ 1")
+        if self.queue_capacity < 1:
+            raise ValueError(f"queue_capacity={self.queue_capacity} must be ≥ 1")
+        if self.swap_every < 0:
+            raise ValueError(f"swap_every={self.swap_every} must be ≥ 0")
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.source)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StreamSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class MeshSpec:
     """Where the computation runs.
 
@@ -196,6 +254,11 @@ class ExperimentSpec:
                  cadence + sweep retry/quarantine budget. The default
                  (no autosave, 2 retries) serializes to nothing, so
                  default hashes are unchanged.
+    stream       online data plane (``StreamSpec``): which stream
+                 source feeds ``Session.step_stream`` and the serving
+                 freshness policy. The default (no stream) serializes
+                 to nothing — offline specs, hashes, and checkpoints
+                 are untouched.
     name         optional label for reports/sweeps.
     """
 
@@ -211,6 +274,7 @@ class ExperimentSpec:
     l2: float = 0.0
     comm_timing: bool = False
     faults: FaultPolicy = dataclasses.field(default_factory=FaultPolicy)
+    stream: StreamSpec = dataclasses.field(default_factory=StreamSpec)
     name: str = ""
 
     def __post_init__(self):
@@ -243,6 +307,21 @@ class ExperimentSpec:
             object.__setattr__(
                 self, "schedule", dataclasses.replace(self.schedule, p_c=self.mesh.p_c)
             )
+        if self.stream.enabled and self.stream.rows_per_round:
+            want = self.schedule.p_r * self.schedule.tau * self.schedule.b
+            if self.stream.rows_per_round != want:
+                raise ValueError(
+                    f"stream.rows_per_round={self.stream.rows_per_round} != "
+                    f"p_r·τ·b={want}: one micro-batch is one schedule round "
+                    f"by construction (leave it 0 to derive it)"
+                )
+
+    def stream_rows_per_round(self) -> int:
+        """Rows one schedule round consumes — the micro-batch size the
+        stream plane must produce (p_r·τ·b unless pinned explicitly)."""
+        return self.stream.rows_per_round or (
+            self.schedule.p_r * self.schedule.tau * self.schedule.b
+        )
 
     # ---- JSON round-tripping ----
 
@@ -276,6 +355,10 @@ class ExperimentSpec:
         # pre-fault-tolerance JSON and hashes stay valid.
         if self.faults != FaultPolicy():
             d["faults"] = self.faults.to_dict()
+        # stream likewise: offline specs serialize (and hash) exactly as
+        # they did before the serving plane existed.
+        if self.stream != StreamSpec():
+            d["stream"] = self.stream.to_dict()
         return d
 
     @classmethod
@@ -285,7 +368,15 @@ class ExperimentSpec:
         mesh = MeshSpec.from_dict(d.pop("mesh", {}))
         stop = StopPolicy.from_dict(d.pop("stop", {}))
         fault_policy = FaultPolicy.from_dict(d.pop("faults", {}))
-        return cls(schedule=schedule, mesh=mesh, stop=stop, faults=fault_policy, **d)
+        stream = StreamSpec.from_dict(d.pop("stream", {}))
+        return cls(
+            schedule=schedule,
+            mesh=mesh,
+            stop=stop,
+            faults=fault_policy,
+            stream=stream,
+            **d,
+        )
 
     def to_json(self, indent: int = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent)

@@ -381,6 +381,7 @@ class HybridDriver:
         self.ledger.rounds = self.rounds_done
         self._step = make_hybrid_step(mesh, prob, sched, comm=comm)
         data_sh = NamedSharding(mesh, P("rows", "cols"))
+        self._data_sh = data_sh
         self._x_sh = NamedSharding(mesh, P("cols"))
         self._idx = jax.device_put(prob.indices, data_sh)
         self._val = jax.device_put(prob.values, data_sh)
@@ -400,6 +401,25 @@ class HybridDriver:
                 jax.block_until_ready(self._x_pad)
                 self.ledger.add_round_seconds(time.perf_counter() - t0)
             self.rounds_done += 1
+        self.ledger.rounds = self.rounds_done
+
+    def advance_stream(self, indices: np.ndarray, values: np.ndarray) -> None:
+        """Run ONE round over streamed data instead of the resident
+        blocks: ``(p_r, p_c, rows_local, width)`` ELL shards with
+        shard-local column ids (``repro.serve.ingest.stream_shard_arrays``
+        builds them from a micro-batch). The round body slices bundles
+        modulo the operand's row count, so with ``rows_local = τ·b`` the
+        τ/s bundles walk the fresh rows exactly once at *any* round
+        index — the step function is the resident one, jit-cached per
+        data shape (fixed-shape streams compile once)."""
+        t0 = time.perf_counter() if self.comm.timed else 0.0
+        idx = jax.device_put(jnp.asarray(indices, jnp.int32), self._data_sh)
+        val = jax.device_put(jnp.asarray(values, jnp.float32), self._data_sh)
+        self._x_pad = self._step(idx, val, self._x_pad, jnp.int32(self.rounds_done))
+        if self.comm.timed:
+            jax.block_until_ready(self._x_pad)
+            self.ledger.add_round_seconds(time.perf_counter() - t0)
+        self.rounds_done += 1
         self.ledger.rounds = self.rounds_done
 
     def gather(self) -> np.ndarray:

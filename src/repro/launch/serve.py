@@ -1,62 +1,130 @@
-"""Serving launcher: batched prefill + decode on real devices.
+"""Serving-plane launcher: stream, train, and serve in one process.
 
-``python -m repro.launch.serve --arch gemma-2b --prompt-len 64 --gen 32``
-uses the reduced config on CPU; --full targets real accelerators.
+``python -m repro.launch.serve --spec examples/specs/serve_drift.json``
+builds the spec's ``Session``, attaches its declared stream source
+(``spec.stream``), starts the batched prediction service (plus the
+stdlib HTTP front when ``--port`` is given), and runs the
+``OnlineController`` interleave loop: one training round per
+micro-batch, hot-swapping the served model per the freshness policy,
+probing held-out accuracy against the stream's current concept as it
+goes. The probe lines make drift recovery visible:
+
+    [probe] round=12 acc=0.91 model_version=4 ...
+    [swap ] round=16 version=5 ...
+
+The transformer text-serving demo that used to live here predated the
+paper pipeline and was removed; for transformer step benchmarks
+(``--arch``-style configs) use ``python -m repro.launch.steps``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
+from pathlib import Path
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.models.init import init_params
-from repro.models.transformer import decode_step, forward, init_cache
-
-
-def serve_batch(cfg, params, prompts: jnp.ndarray, gen: int, max_len: int):
-    """Greedy-decode ``gen`` tokens for a batch of prompts."""
-    B, S = prompts.shape
-    cache = init_cache(cfg, batch=B, max_len=max_len, dtype=jnp.float32)
-    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
-    # prefill by stepping (simple reference server; production prefill
-    # would batch-process the prompt — see launch/steps.make_prefill_step)
-    tok = prompts[:, :1]
-    for i in range(S):
-        logits, cache = step(params, cache, prompts[:, i : i + 1])
-    out = [jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)]
-    for _ in range(gen - 1):
-        logits, cache = step(params, cache, out[-1])
-        out.append(jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32))
-    return jnp.concatenate(out, axis=1)
+from repro.api import ExperimentSpec, Session
+from repro.serve import (
+    DriftStream,
+    ModelStore,
+    OnlineController,
+    PredictionService,
+    make_stream_source,
+    serve_http,
+)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
+def probe_accuracy(service: PredictionService, source, batch_index: int) -> float:
+    """Held-out accuracy against the stream's *current* concept: draw a
+    fresh micro-batch (an index the trainer never consumes) and compare
+    the service's labels to the generator's."""
+    batch = source.batch(batch_index)
+    res = service.predict(batch.indices, batch.values)
+    return float(np.mean(res.labels == batch.y))
 
-    cfg = get_config(args.arch)
-    if not args.full:
-        cfg = reduced(cfg)
-    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="stream → train → hot-swap → predict, one process"
     )
-    t0 = time.time()
-    out = serve_batch(cfg, params, prompts, args.gen, args.prompt_len + args.gen + 1)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("sample:", out[0].tolist())
+    ap.add_argument("--spec", required=True, help="ExperimentSpec JSON (with stream)")
+    ap.add_argument("--rounds", type=int, default=None, help="stream rounds to train")
+    ap.add_argument("--port", type=int, default=None,
+                    help="also serve HTTP on this port (0 = ephemeral)")
+    ap.add_argument("--swap-every", type=int, default=None,
+                    help="override the spec's freshness cadence")
+    ap.add_argument("--probe-every", type=int, default=4,
+                    help="probe served accuracy every N rounds (0 = off)")
+    ap.add_argument("--swap-dir", default=None, help="where swap checkpoints land")
+    ap.add_argument("--out", default=None, help="write final metrics JSON here")
+    args = ap.parse_args(argv)
+
+    spec = ExperimentSpec.from_json(Path(args.spec).read_text())
+    if not spec.stream.enabled:
+        ap.error("spec has no stream attached (stream.source='')")
+    source = make_stream_source(spec)
+
+    session = Session(spec)
+    store = ModelStore()
+    http_server = None
+    with PredictionService(store) as service:
+        if args.port is not None:
+            http_server, _ = serve_http(service, port=args.port)
+            host, port = http_server.server_address[:2]
+            print(f"[serve] http://{host}:{port}  (POST /predict, GET /healthz /stats)")
+
+        ctrl = OnlineController(
+            session, source, store, service=service,
+            swap_every=args.swap_every, swap_dir=args.swap_dir,
+        )
+        rounds = args.rounds if args.rounds is not None else session.total_rounds
+        print(
+            f"[start] dataset={spec.dataset} stream={spec.stream.source} "
+            f"rows/round={spec.stream_rows_per_round()} rounds={rounds} "
+            f"swap_every={ctrl.swap_every}"
+        )
+
+        # drive round-by-round so probes and swap lines interleave live
+        t0 = time.perf_counter()
+        done = 0
+        probing = args.probe_every > 0 and isinstance(source, DriftStream)
+        while done < rounds and not session.done:
+            before = store.swaps
+            ev = ctrl.step()
+            done += 1
+            if store.swaps > before:
+                print(f"[swap ] round={session.rounds_done} version={store.version}")
+            if probing and session.rounds_done % args.probe_every == 0:
+                acc = probe_accuracy(service, source, session.rounds_done)
+                loss = session.losses[-1] if session.losses else float("nan")
+                print(
+                    f"[probe] round={session.rounds_done} acc={acc:.3f} "
+                    f"holdout_loss={loss:.4f} model_version={store.version}"
+                )
+            if ev.stop:
+                break
+
+        m = ctrl.finish()
+        elapsed = time.perf_counter() - t0
+        print(
+            f"[done ] rounds={m.rounds_done} swaps={m.swaps} "
+            f"failed_swaps={m.failed_swaps} staleness={m.staleness_rounds} "
+            f"rounds/s={m.rounds_per_sec:.2f} "
+            f"predictions={m.predictions_served} wall={elapsed:.1f}s"
+        )
+        if args.out:
+            payload = {"metrics": m.to_dict(), "feed": ctrl.feed.stats(),
+                       "service": service.stats(), "store": store.stats()}
+            Path(args.out).write_text(json.dumps(payload, indent=2))
+            print(f"[out  ] {args.out}")
+        if http_server is not None:
+            http_server.shutdown()
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

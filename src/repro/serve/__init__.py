@@ -1,0 +1,51 @@
+"""repro.serve — the online serving plane.
+
+The offline stack (spec → Session → rounds over a resident dataset)
+gains its live half here:
+
+* ``repro.serve.stream``      — the streaming data plane: a
+  ``StreamSource`` protocol (deterministic, replayable micro-batches),
+  a drifting synthetic generator for concept-shift benchmarks, and the
+  bounded-queue ``StreamFeed`` that decouples ingest from training.
+* ``repro.serve.store``       — ``ModelStore``: the serving-side model
+  holder; hot-swaps weights from integrity-hashed session checkpoints
+  without ever exposing a torn model.
+* ``repro.serve.server``      — ``PredictionService``: batched
+  ``predict()`` with request micro-batching, plus a stdlib-HTTP
+  front (``serve_http``) for out-of-process clients.
+* ``repro.serve.controller``  — ``OnlineController``: interleaves
+  serve and train on one ``Session`` (train-on-arrival, freshness
+  policy for hot swaps, per-stage metrics).
+
+Entry point: ``python -m repro.launch.serve --spec spec.json``.
+"""
+
+from repro.serve.stream import (
+    DriftStream,
+    MicroBatch,
+    ReplayStream,
+    StreamDesyncError,
+    StreamFeed,
+    StreamSource,
+    make_stream_source,
+)
+from repro.serve.store import ModelSnapshot, ModelStore
+from repro.serve.server import PredictionService, PredictResult, serve_http
+from repro.serve.controller import OnlineController, StageMetrics
+
+__all__ = [
+    "DriftStream",
+    "MicroBatch",
+    "ReplayStream",
+    "StreamDesyncError",
+    "StreamFeed",
+    "StreamSource",
+    "make_stream_source",
+    "ModelSnapshot",
+    "ModelStore",
+    "PredictionService",
+    "PredictResult",
+    "serve_http",
+    "OnlineController",
+    "StageMetrics",
+]

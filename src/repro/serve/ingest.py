@@ -1,0 +1,118 @@
+"""Micro-batch → engine row-shards: the host-side glue between the
+streaming data plane and the two executors.
+
+A micro-batch arrives as one (rows, width) ELL block with global column
+ids. One schedule round consumes ``p_r · τ · b`` rows (τ/s bundles of
+s·b rows per team), so the batch reshapes into the executors' layouts:
+
+* simulated — a per-round ``TeamProblem`` ``(p_r, τ·b, width)``: the
+  engine's cyclic bundle slicing ``(k₀·s·b) mod m_local`` with
+  ``m_local = τ·b`` walks the fresh rows exactly once per round, for
+  *any* round index — streaming reuses the offline round body verbatim.
+* shard_map — ``(p_r, p_c, τ·b, width)`` blocks with column ids locally
+  renumbered per the session's ``ColumnPartition`` (same renumbering
+  ``build_2d_problem`` applies to the resident dataset), padded to the
+  shared ``width`` so the jitted step compiles once and is reused for
+  every batch.
+
+Shapes are fixed by the first batch; the session enforces them, so the
+jit caches stay warm for the life of the stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.teams import TeamProblem
+from repro.sparse.partition import ColumnPartition
+
+__all__ = ["ColumnLocalizer", "stream_team_problem", "stream_shard_arrays"]
+
+
+def stream_team_problem(batch, p_r: int, n: int, objective) -> TeamProblem:
+    """One micro-batch as a p_r-team problem (simulated backend).
+
+    Rows split contiguously across teams (row block i → team i), labels
+    folded in (diag(y)·A), every row valid. ``m`` is the batch's true
+    row count — only the loss probe reads it, and streaming sessions
+    probe the resident holdout problem instead."""
+    rows = batch.rows
+    if rows % p_r:
+        raise ValueError(f"batch rows={rows} not divisible by p_r={p_r}")
+    rows_local = rows // p_r
+    idx = batch.indices.reshape(p_r, rows_local, batch.width)
+    val = batch.ya_values().reshape(p_r, rows_local, batch.width)
+    return TeamProblem(
+        indices=jnp.asarray(idx),
+        values=jnp.asarray(val, jnp.float32),
+        rows_valid=jnp.ones((p_r, rows_local), bool),
+        p=p_r,
+        m=rows,
+        n=n,
+        objective=objective,
+    )
+
+
+@dataclasses.dataclass
+class ColumnLocalizer:
+    """Global → (shard, local id) maps for one ``ColumnPartition``,
+    built once per session and applied per micro-batch (vectorized
+    lookups — no per-batch repartitioning)."""
+
+    owner: np.ndarray  # (n,) int32 — shard owning each global column
+    local: np.ndarray  # (n,) int32 — column's id inside its shard
+    p_c: int
+
+    @classmethod
+    def from_partition(cls, cp: ColumnPartition) -> "ColumnLocalizer":
+        n = int(cp.order.shape[0])
+        owner = np.empty(n, np.int32)
+        local = np.empty(n, np.int32)
+        for j in range(cp.p):
+            cols = cp.rank_cols(j)
+            owner[cols] = j
+            local[cols] = np.arange(len(cols), dtype=np.int32)
+        return cls(owner=owner, local=local, p_c=cp.p)
+
+
+def stream_shard_arrays(
+    batch, loc: ColumnLocalizer, p_r: int, width: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """One micro-batch as (indices, values) of shape
+    ``(p_r, p_c, rows_local, width)`` with shard-local column ids —
+    the operand layout ``make_hybrid_step`` maps over the mesh.
+
+    ``width`` is the fixed per-shard ELL width (the batch width is an
+    upper bound on any shard's per-row count, so reusing it keeps one
+    static shape for every batch); overflow is impossible by
+    construction, padding is id 0 + value 0.
+    """
+    rows = batch.rows
+    if rows % p_r:
+        raise ValueError(f"batch rows={rows} not divisible by p_r={p_r}")
+    rows_local = rows // p_r
+    p_c = loc.p_c
+    owner = loc.owner[batch.indices]  # (rows, width)
+    local = loc.local[batch.indices]
+    ya = batch.ya_values()
+    # padded slots (value 0) must stay inert on every shard: route them
+    # to shard 0 / id 0 explicitly so a pad never lands a nonzero id.
+    pad = batch.values == 0.0
+    owner = np.where(pad, 0, owner)
+    local = np.where(pad, 0, local)
+
+    idx = np.zeros((p_r, p_c, rows_local, width), np.int32)
+    val = np.zeros((p_r, p_c, rows_local, width), np.float32)
+    for r in range(rows):
+        ti, tr = divmod(r, rows_local)
+        for j in range(p_c):
+            sel = owner[r] == j
+            sel &= ~pad[r]
+            cnt = int(sel.sum())
+            if cnt:
+                idx[ti, j, tr, :cnt] = local[r][sel]
+                val[ti, j, tr, :cnt] = ya[r][sel]
+    return idx, val

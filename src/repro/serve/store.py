@@ -1,0 +1,143 @@
+"""ModelStore — the serving side's model holder, hot-swappable.
+
+The prediction service reads models from here; the training side
+publishes into it. The two never share mutable state: a published model
+is an immutable ``ModelSnapshot`` (read-only weight buffer), and a swap
+is one atomic reference assignment under a lock — a reader either sees
+the whole previous model or the whole next one, never a mix.
+
+The hot-swap door is ``swap_from_checkpoint``: weights come from a PR 6
+integrity-hashed session checkpoint via
+``repro.train.checkpoint.load_model_weights``, which verifies the
+manifest self-hash and payload sha256 *before* anything is installed.
+A corrupt/torn checkpoint raises and leaves the current model serving —
+ingest and prediction never pause for a failed swap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.train.checkpoint import load_model_weights
+
+__all__ = ["ModelSnapshot", "ModelStore"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSnapshot:
+    """One immutable served model.
+
+    x            (n,) float32 weights — the buffer is frozen read-only.
+    version      monotonically increasing store version.
+    rounds_done  training rounds behind this model (staleness unit).
+    spec_hash    content hash of the spec that trained it ("" if
+                 published directly from weights).
+    loaded_at    ``time.monotonic()`` at install (staleness in seconds).
+    """
+
+    x: np.ndarray
+    version: int
+    rounds_done: int = 0
+    spec_hash: str = ""
+    loaded_at: float = 0.0
+
+    @property
+    def n(self) -> int:
+        return int(self.x.shape[0])
+
+    def predict(self, indices: np.ndarray, values: np.ndarray) -> np.ndarray:
+        """Batched margins for (B, width) ELL rows: Σ_w x[idx]·val.
+        Padded slots (value 0) contribute nothing; ids must be < n."""
+        indices = np.asarray(indices)
+        values = np.asarray(values, np.float32)
+        return np.einsum("rw,rw->r", self.x[indices], values)
+
+
+class ModelStore:
+    """Thread-safe holder of the current ``ModelSnapshot``.
+
+    ``snapshot()`` hands out the current immutable model (readers pin it
+    for their whole batch — a concurrent swap never tears a batch);
+    ``publish``/``swap_from_checkpoint`` install the next one
+    atomically. ``swaps`` counts successful installs,
+    ``failed_swaps`` the rejected (corrupt) ones.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._snapshot: ModelSnapshot | None = None
+        self.swaps = 0
+        self.failed_swaps = 0
+
+    # ---- read side ----
+
+    def snapshot(self) -> ModelSnapshot:
+        snap = self._snapshot  # atomic ref read
+        if snap is None:
+            raise RuntimeError("ModelStore is empty — publish or swap a model first")
+        return snap
+
+    @property
+    def version(self) -> int:
+        snap = self._snapshot
+        return snap.version if snap is not None else 0
+
+    def predict(self, indices: np.ndarray, values: np.ndarray) -> tuple[np.ndarray, int]:
+        """Margins + the version that served them (one snapshot pin for
+        the whole batch — never a torn model mid-batch)."""
+        snap = self.snapshot()
+        return snap.predict(indices, values), snap.version
+
+    # ---- write side ----
+
+    def publish(
+        self, x: np.ndarray, rounds_done: int = 0, spec_hash: str = ""
+    ) -> ModelSnapshot:
+        """Install weights directly (initial model, tests). The buffer
+        is copied and frozen — later writes by the publisher can't
+        mutate a served model."""
+        buf = np.array(x, np.float32, copy=True)
+        buf.flags.writeable = False
+        with self._lock:
+            snap = ModelSnapshot(
+                x=buf,
+                version=self.version + 1,
+                rounds_done=int(rounds_done),
+                spec_hash=spec_hash,
+                loaded_at=time.monotonic(),
+            )
+            self._snapshot = snap
+            self.swaps += 1
+        return snap
+
+    def swap_from_checkpoint(self, path) -> ModelSnapshot:
+        """Hot-swap from an integrity-hashed session checkpoint.
+        Verification (manifest self-hash + payload sha256) happens
+        before install; on ``CheckpointCorruptError`` the current model
+        keeps serving untouched."""
+        try:
+            x, meta = load_model_weights(path)
+        except BaseException:
+            self.failed_swaps += 1
+            raise
+        return self.publish(
+            x,
+            rounds_done=int(meta.get("rounds_done", 0)),
+            spec_hash=str(meta.get("spec_hash", "")),
+        )
+
+    def stats(self) -> dict:
+        snap = self._snapshot
+        return {
+            "version": self.version,
+            "swaps": self.swaps,
+            "failed_swaps": self.failed_swaps,
+            "rounds_done": snap.rounds_done if snap is not None else 0,
+            "model_age_s": (
+                time.monotonic() - snap.loaded_at if snap is not None else None
+            ),
+        }

@@ -1,11 +1,12 @@
 """Training substrate: data pipeline, checkpointing, loop driver."""
 
-from repro.train.data import MarkovTextStream, bigram_entropy_floor
+from repro.train.data import MarkovTextStream, TokenMicroBatch, bigram_entropy_floor
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
 from repro.train.loop import TrainReport, train
 
 __all__ = [
     "MarkovTextStream",
+    "TokenMicroBatch",
     "bigram_entropy_floor",
     "restore_checkpoint",
     "save_checkpoint",

@@ -312,6 +312,33 @@ def load_session_checkpoint(
         ) from e
 
 
+def load_model_weights(path: str | os.PathLike) -> tuple[np.ndarray, dict]:
+    """Swap-safe read of a session checkpoint's *weights only* — the
+    serving plane's hot-swap door (``repro.serve.ModelStore``).
+
+    Integrity is verified exactly like a full restore (manifest
+    self-hash + npz sha256), so a torn or truncated checkpoint raises
+    ``CheckpointCorruptError`` *before* any weight byte is trusted — a
+    swap either installs a fully verified model or changes nothing. No
+    Session is rebuilt: the returned manifest dict carries the spec,
+    its hash, and ``rounds_done`` for staleness accounting."""
+    path = Path(path)
+    npz, manifest = _require_pair(path)
+    meta = _read_manifest(manifest, npz)
+    if meta.get("format") != _SESSION_FORMAT:
+        raise CheckpointCorruptError(
+            f"{path}: not a session checkpoint (format={meta.get('format')!r})"
+        )
+    data = _load_npz(npz)
+    try:
+        x = np.asarray(data["x"])
+    except KeyError as e:
+        raise CheckpointCorruptError(
+            f"{path}: checkpoint is missing field 'x'"
+        ) from e
+    return x, meta
+
+
 def discard_session_checkpoint(path: str | os.PathLike) -> None:
     """Remove a session checkpoint (durable pair + any stale temps) —
     what retry logic does with a checkpoint that failed to load."""

@@ -1,0 +1,159 @@
+"""Stream chaos: a serving-plane worker dies mid-stream, a fresh
+process resumes from the autosave, and the finished weights are
+bitwise-identical to the uninterrupted run — i.e. no micro-batch was
+duplicated and none was dropped across the kill.
+
+Exactly-once is structural, not bookkept: the round counter IS the
+stream position, sources replay batch k purely from (seed, k), and
+``step_stream`` refuses any batch whose index disagrees with the
+counter. So if the resumed trajectory lands bitwise on the clean one,
+the resumed process consumed precisely batches 4..N-1 — a duplicate or
+a gap would change the weights (and trip ``StreamDesyncError`` first).
+
+The seeded sweep variant runs the same kill round against several
+stream seeds — the CI job's cheap chaos sweep for the serving plane.
+"""
+
+import numpy as np
+import pytest
+
+from chaos_util import SIGKILLED, run_chaos
+
+_SPEC = """
+from repro.api import ExperimentSpec, FaultPolicy, MeshSpec, StreamSpec
+from repro.core import ParallelSGDSchedule
+
+sched = ParallelSGDSchedule.hybrid(2, 2, 4, 0.2, 8, rounds=8, loss_every=2)
+spec = ExperimentSpec(
+    dataset="rcv1-sm",
+    schedule=sched,
+    mesh=MeshSpec(p_r=2, p_c={p_c}, backend="{backend}"),
+    stream=StreamSpec(source="drift", seed={stream_seed}, drift_at=3),
+    faults=FaultPolicy(autosave_every=1),
+    name="chaos-stream",
+)
+"""
+
+_RUN_CLEAN = """
+import numpy as np
+from repro.api import Session
+from repro.serve import make_stream_source
+sess = Session(spec)
+while not sess.done:
+    sess.step_stream(make_stream_source(spec))
+np.savez(r"{tmp}/clean.npz", x=sess.current_x(),
+         losses=np.asarray(sess.losses, np.float32))
+print("CLEAN", sess.rounds_done)
+"""
+
+_RUN_VICTIM = """
+from repro.api import Session
+from repro.core.faults import FaultEvent, FaultPlan, install
+from repro.serve import make_stream_source
+plan = FaultPlan(events=[FaultEvent(kind="kill", site="round", at={kill_at})])
+sess = Session(spec, autosave_dir=r"{tmp}")
+with install(plan, hard_kill=True):
+    while not sess.done:
+        sess.step_stream(make_stream_source(spec))
+print("UNREACHABLE")  # SIGKILL means this line never runs
+"""
+
+_RUN_RESUMER = """
+import numpy as np
+from repro.api import Session, autosave_base
+from repro.serve import make_stream_source
+sess = Session.restore(autosave_base(r"{tmp}", spec), spec=spec)
+assert sess.rounds_done == {kill_at}, sess.rounds_done
+# re-attach the stream AT the restored round: the source replays batch
+# {kill_at} onward — the victim's consumed prefix is never re-trained.
+while not sess.done:
+    sess.step_stream(make_stream_source(spec))
+clean = np.load(r"{tmp}/clean.npz")
+assert np.array_equal(sess.current_x(), clean["x"]), "resumed weights diverged"
+assert np.array_equal(
+    np.asarray(sess.losses, np.float32), clean["losses"]
+), "resumed loss trace diverged"
+print("RESUMED_BITWISE", sess.rounds_done)
+"""
+
+BACKENDS = [("simulated", 1, 1), ("shard_map", 4, 8)]
+
+
+@pytest.mark.parametrize("backend,p_c,devices", BACKENDS)
+def test_kill_mid_stream_resumes_with_no_dup_no_drop(backend, p_c, devices, tmp_path):
+    spec_code = _SPEC.format(backend=backend, p_c=p_c, stream_seed=3)
+    kill_at = 4
+
+    run_chaos(spec_code + _RUN_CLEAN.format(tmp=tmp_path), devices=devices)
+    run_chaos(
+        spec_code + _RUN_VICTIM.format(tmp=tmp_path, kill_at=kill_at),
+        devices=devices,
+        expect_returncode=SIGKILLED,
+    )
+    out = run_chaos(
+        spec_code + _RUN_RESUMER.format(tmp=tmp_path, kill_at=kill_at),
+        devices=devices,
+    )
+    assert "RESUMED_BITWISE 8" in out
+
+
+@pytest.mark.parametrize("stream_seed", [0, 1, 2])
+def test_seeded_stream_kill_sweep(stream_seed, tmp_path):
+    """The seeded chaos sweep (simulated backend keeps it cheap): the
+    same kill against different stream seeds — any bookkeeping bug that
+    depends on what the data happens to be shows up here."""
+    spec_code = _SPEC.format(backend="simulated", p_c=1, stream_seed=stream_seed)
+    kill_at = 5
+
+    run_chaos(spec_code + _RUN_CLEAN.format(tmp=tmp_path), devices=1)
+    run_chaos(
+        spec_code + _RUN_VICTIM.format(tmp=tmp_path, kill_at=kill_at),
+        devices=1,
+        expect_returncode=SIGKILLED,
+    )
+    out = run_chaos(
+        spec_code + _RUN_RESUMER.format(tmp=tmp_path, kill_at=kill_at), devices=1
+    )
+    assert "RESUMED_BITWISE 8" in out
+
+
+def test_hot_swap_never_serves_a_torn_model(tmp_path):
+    """Chaos on the swap path: a checkpoint truncated mid-write (the
+    ckpt_truncate fault) must be REJECTED by the swap — the service
+    keeps answering from the previous version."""
+    out = run_chaos(
+        _SPEC.format(backend="simulated", p_c=1, stream_seed=3)
+        + f"""
+import numpy as np
+from repro.core.faults import FaultEvent, FaultPlan, install
+from repro.api import Session
+from repro.serve import ModelStore, PredictionService, make_stream_source
+from repro.train.checkpoint import CheckpointCorruptError
+
+sess = Session(spec)
+sess.step_stream(make_stream_source(spec), 4)
+store = ModelStore()
+store.publish(sess.current_x(), rounds_done=4)
+
+# a truncated write: the save itself is atomic-temp+rename, so emulate
+# the torn artifact the fault seam produces at the 'save' site
+good = r"{tmp_path}/good"
+sess.save(good)
+import pathlib
+npz = pathlib.Path(good).with_suffix(".npz")
+npz.write_bytes(npz.read_bytes()[:-32])  # torn tail
+
+with PredictionService(store) as svc:
+    try:
+        store.swap_from_checkpoint(good)
+        raise AssertionError("torn checkpoint installed!")
+    except CheckpointCorruptError:
+        pass
+    res = svc.predict([[0, 1]], [[1.0, 1.0]])
+    assert res.model_version == 1  # still the pre-swap model
+    assert store.failed_swaps == 1
+print("TORN_REJECTED")
+""",
+        devices=1,
+    )
+    assert "TORN_REJECTED" in out

@@ -304,3 +304,86 @@ def test_x64_strict_sstep_identity():
         devices=1,
     )
     assert "OK" in out
+
+
+def test_stream_rounds_match_simulated_and_replay_bitwise():
+    """Streaming parity + determinism on the real mesh: the same drift
+    stream trained through shard_map ``step_stream`` matches the
+    simulated oracle, and a second shard_map run is bitwise-identical
+    (the streaming door — HybridDriver.advance_stream — is as
+    deterministic as the resident path)."""
+    out = run_in_subprocess(
+        """
+        import numpy as np
+        from repro.api import ExperimentSpec, MeshSpec, Session, StreamSpec
+        from repro.core.engine import ParallelSGDSchedule
+        from repro.serve import make_stream_source
+
+        sched = ParallelSGDSchedule.hybrid(
+            p_r=2, s=2, b=4, eta=0.2, tau=8, rounds=6, loss_every=3
+        )
+        base = dict(dataset="rcv1-sm", schedule=sched,
+                    stream=StreamSpec(source="drift", seed=3, drift_at=3))
+        sim = ExperimentSpec(mesh=MeshSpec(p_r=2, p_c=1, backend="simulated"), **base)
+        dist = ExperimentSpec(mesh=MeshSpec(p_r=2, p_c=2, backend="shard_map"), **base)
+
+        a = Session(sim)
+        while not a.done:
+            a.step_stream(make_stream_source(sim))
+        runs = []
+        for _ in range(2):
+            s = Session(dist)
+            while not s.done:
+                s.step_stream(make_stream_source(dist))
+            runs.append((s.current_x(), list(s.losses)))
+
+        assert np.array_equal(runs[0][0], runs[1][0]), "shard_map stream not deterministic"
+        assert runs[0][1] == runs[1][1]
+        diff = float(np.abs(a.current_x() - runs[0][0]).max())
+        assert diff == 0.0, f"stream parity broke: max |diff|={diff}"
+        print("OK", diff)
+        """,
+        devices=4,
+    )
+    assert "OK" in out
+
+
+def test_stream_resume_mid_stream_shard_map_bitwise(tmp_path):
+    """Kill-free resume check on the mesh: autosave at round 4, restore
+    in the same process, finish — bitwise equal to uninterrupted."""
+    out = run_in_subprocess(
+        f"""
+        import numpy as np
+        from pathlib import Path
+        from repro.api import (ExperimentSpec, FaultPolicy, MeshSpec, Session,
+                               StreamSpec)
+        from repro.core.engine import ParallelSGDSchedule
+        from repro.serve import make_stream_source
+
+        d = Path({str(tmp_path)!r})
+        sched = ParallelSGDSchedule.hybrid(
+            p_r=2, s=2, b=4, eta=0.2, tau=8, rounds=8, loss_every=4
+        )
+        spec = ExperimentSpec(
+            dataset="rcv1-sm", schedule=sched,
+            mesh=MeshSpec(p_r=2, p_c=2, backend="shard_map"),
+            stream=StreamSpec(source="drift", seed=3),
+            faults=FaultPolicy(autosave_every=4),
+        )
+        ref = Session(spec)
+        while not ref.done:
+            ref.step_stream(make_stream_source(spec))
+
+        interrupted = Session(spec, autosave_dir=d)
+        interrupted.step_stream(make_stream_source(spec), 5)
+        resumed = Session.restore(interrupted.autosave_path, spec=spec)
+        assert resumed.rounds_done == 4, resumed.rounds_done
+        while not resumed.done:
+            resumed.step_stream(make_stream_source(spec))
+        assert np.array_equal(ref.current_x(), resumed.current_x())
+        assert ref.losses == resumed.losses
+        print("OK")
+        """,
+        devices=4,
+    )
+    assert "OK" in out

@@ -1,0 +1,502 @@
+"""The serving plane: hot-swap store, batched prediction service,
+Session.step_stream, and the online controller.
+
+The load-bearing guarantees:
+
+* offline specs are untouched — no ``stream`` key on the wire, same
+  content hash, ``step_rounds`` never consults the stream plane;
+* streaming is deterministic — same seed → bitwise-identical weights,
+  including resume-mid-stream from an autosave (no dup/drop, enforced
+  structurally by the batch-index check);
+* a swap is never torn — weights go through the integrity-hashed
+  checkpoint format and verify *before* install; a corrupt swap leaves
+  the old model serving.
+"""
+
+import dataclasses
+import json
+import tempfile
+import urllib.request
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, FaultPolicy, MeshSpec, Session, StreamSpec
+from repro.core.engine import ParallelSGDSchedule
+from repro.serve import (
+    DriftStream,
+    ModelStore,
+    OnlineController,
+    PredictionService,
+    StreamDesyncError,
+    StreamFeed,
+    make_stream_source,
+    serve_http,
+)
+from repro.train.checkpoint import CheckpointCorruptError, load_model_weights
+
+
+def sched(rounds=8, loss_every=4, eta=0.2):
+    return ParallelSGDSchedule.hybrid(
+        p_r=2, s=2, b=4, eta=eta, tau=8, rounds=rounds, loss_every=loss_every
+    )
+
+
+MESH = MeshSpec(p_r=2, p_c=1, backend="simulated")
+
+
+def stream_spec(rounds=8, loss_every=4, **stream_kw):
+    stream_kw.setdefault("source", "drift")
+    stream_kw.setdefault("seed", 3)
+    return ExperimentSpec(
+        dataset="rcv1-sm",
+        schedule=sched(rounds, loss_every),
+        mesh=MESH,
+        stream=StreamSpec(**stream_kw),
+    )
+
+
+# ---------------- StreamSpec (spec layer) ----------------
+
+
+def test_stream_spec_roundtrip():
+    spec = stream_spec(drift_at=5, width=8, swap_every=2)
+    again = ExperimentSpec.from_dict(spec.to_dict())
+    assert again == spec
+    assert again.stream.drift_at == 5
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+def test_default_spec_has_no_stream_on_the_wire():
+    """Offline specs serialize (and content-hash) exactly as before the
+    serving plane existed — old JSON and checkpoints stay valid."""
+    spec = ExperimentSpec(dataset="rcv1-sm", schedule=sched(), mesh=MESH)
+    d = spec.to_dict()
+    assert "stream" not in d
+    assert ExperimentSpec.from_dict(d) == spec  # old JSON (no key) loads
+    assert spec.content_hash() == dataclasses.replace(
+        spec, stream=StreamSpec()
+    ).content_hash()
+    assert spec.content_hash() != stream_spec().content_hash()
+
+
+def test_stream_spec_validation():
+    with pytest.raises(ValueError, match="source"):
+        StreamSpec(source="firehose")
+    with pytest.raises(ValueError, match="queue_capacity"):
+        StreamSpec(queue_capacity=0)
+    # pinned rows_per_round must equal one round's consumption
+    with pytest.raises(ValueError, match="rows_per_round"):
+        stream_spec(rows_per_round=63)
+    ok = stream_spec(rows_per_round=64)  # p_r·τ·b = 2·8·4
+    assert ok.stream_rows_per_round() == 64
+    assert stream_spec().stream_rows_per_round() == 64  # derived
+
+
+def test_make_stream_source_follows_the_spec():
+    src = make_stream_source(stream_spec(drift_at=7))
+    assert isinstance(src, DriftStream)
+    assert src.rows == 64 and src.drift_at == 7
+    from repro.serve import ReplayStream
+
+    rep = make_stream_source(stream_spec(source="replay"))
+    assert isinstance(rep, ReplayStream)
+    with pytest.raises(ValueError, match="no stream"):
+        make_stream_source(
+            ExperimentSpec(dataset="rcv1-sm", schedule=sched(), mesh=MESH)
+        )
+
+
+# ---------------- checkpoint → weights door ----------------
+
+
+def test_load_model_weights_roundtrip(tmp_path):
+    spec = stream_spec()
+    sess = Session(spec)
+    sess.step_stream(make_stream_source(spec), 4)
+    path = tmp_path / "ck"
+    sess.save(path)
+    x, meta = load_model_weights(path)
+    assert np.array_equal(x, sess.current_x())
+    assert meta["rounds_done"] == 4
+    assert meta["spec_hash"] == spec.content_hash()
+
+
+def test_load_model_weights_rejects_corruption(tmp_path):
+    spec = stream_spec()
+    sess = Session(spec)
+    sess.step_stream(make_stream_source(spec), 2)
+    path = tmp_path / "ck"
+    sess.save(path)
+    npz = path.with_suffix(".npz")
+    blob = bytearray(npz.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    npz.write_bytes(bytes(blob))
+    with pytest.raises(CheckpointCorruptError):
+        load_model_weights(path)
+
+
+# ---------------- ModelStore ----------------
+
+
+def test_store_publish_and_snapshot_immutability():
+    store = ModelStore()
+    x = np.arange(5, dtype=np.float32)
+    snap = store.publish(x, rounds_done=3)
+    x[0] = 99.0  # publisher's buffer — must not reach the served model
+    assert snap.x[0] == 0.0
+    with pytest.raises(ValueError):
+        snap.x[1] = 7.0  # served weights are frozen
+    assert store.version == 1 and snap.rounds_done == 3
+
+
+def test_store_empty_raises():
+    store = ModelStore()
+    with pytest.raises(RuntimeError, match="empty"):
+        store.snapshot()
+    assert store.version == 0
+
+
+def test_store_swap_from_checkpoint(tmp_path):
+    spec = stream_spec()
+    sess = Session(spec)
+    sess.step_stream(make_stream_source(spec), 4)
+    path = tmp_path / "ck"
+    sess.save(path)
+    store = ModelStore()
+    store.publish(np.zeros(sess.current_x().shape[0], np.float32))
+    snap = store.swap_from_checkpoint(path)
+    assert snap.version == 2
+    assert np.array_equal(snap.x, sess.current_x())
+    assert snap.rounds_done == 4 and snap.spec_hash == spec.content_hash()
+
+
+def test_corrupt_swap_keeps_the_old_model_serving(tmp_path):
+    spec = stream_spec()
+    sess = Session(spec)
+    sess.step_stream(make_stream_source(spec), 2)
+    path = tmp_path / "ck"
+    sess.save(path)
+    npz = path.with_suffix(".npz")
+    blob = bytearray(npz.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    npz.write_bytes(bytes(blob))
+
+    store = ModelStore()
+    old = store.publish(np.ones(4, np.float32), rounds_done=1)
+    with pytest.raises(CheckpointCorruptError):
+        store.swap_from_checkpoint(path)
+    assert store.snapshot() is old  # untouched — never a torn install
+    assert store.failed_swaps == 1 and store.version == 1
+
+
+def test_store_predict_pins_one_version():
+    store = ModelStore()
+    store.publish(np.array([1.0, 2.0, -1.0], np.float32))
+    idx = np.array([[0, 1], [2, 2]], np.int32)
+    val = np.array([[1.0, 1.0], [1.0, 0.0]], np.float32)
+    margins, version = store.predict(idx, val)
+    assert version == 1
+    np.testing.assert_allclose(margins, [3.0, -1.0])
+
+
+# ---------------- PredictionService ----------------
+
+
+def test_service_batches_and_answers():
+    store = ModelStore()
+    store.publish(np.array([2.0, -3.0], np.float32))
+    with PredictionService(store, max_wait_s=0.01) as svc:
+        res = svc.predict([[0, 1]], [[1.0, 0.5]])
+        np.testing.assert_allclose(res.margins, [0.5])
+        assert res.labels.tolist() == [1.0]
+        assert res.model_version == 1
+        # a single flat row is promoted to a batch of one
+        res2 = svc.predict([0, 0], [1.0, 1.0])
+        np.testing.assert_allclose(res2.margins, [4.0])
+        st = svc.stats()
+        assert st["rows_served"] == 2 and st["errors"] == 0
+
+
+def test_service_coalesces_concurrent_requests():
+    import threading
+
+    store = ModelStore()
+    store.publish(np.ones(8, np.float32))
+    results = []
+    with PredictionService(store, max_wait_s=0.05) as svc:
+        def ask(i):
+            results.append(svc.predict([[i % 8]], [[1.0]]))
+
+        threads = [threading.Thread(target=ask, args=(i,)) for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        st = svc.stats()
+    assert len(results) == 6
+    assert all(r.margins.shape == (1,) for r in results)
+    assert st["batches"] < 6  # at least some coalescing happened
+
+
+def test_service_survives_a_swap_mid_traffic():
+    """Predictions keep answering while the model hot-swaps, and every
+    answer is computed by exactly one version (never a mix)."""
+    store = ModelStore()
+    store.publish(np.full(4, 1.0, np.float32))
+    with PredictionService(store, max_wait_s=0.001) as svc:
+        seen = set()
+        for i in range(50):
+            if i == 25:
+                store.publish(np.full(4, 2.0, np.float32))
+            res = svc.predict([[0, 1, 2, 3]], [[1.0, 1.0, 1.0, 1.0]])
+            # margin must match the version that served it exactly
+            want = 4.0 if res.model_version == 1 else 8.0
+            np.testing.assert_allclose(res.margins, [want])
+            seen.add(res.model_version)
+    assert seen == {1, 2}
+
+
+def test_service_propagates_errors():
+    store = ModelStore()  # empty: predict must fail loudly
+    with PredictionService(store) as svc:
+        with pytest.raises(RuntimeError, match="empty"):
+            svc.predict([[0]], [[1.0]])
+        assert svc.stats()["errors"] == 1
+
+
+def test_http_front(tmp_path):
+    store = ModelStore()
+    store.publish(np.array([1.0, -1.0, 0.5], np.float32))
+    with PredictionService(store) as svc:
+        server, _ = serve_http(svc, port=0)
+        host, port = server.server_address[:2]
+        base = f"http://{host}:{port}"
+        try:
+            with urllib.request.urlopen(f"{base}/healthz", timeout=10) as r:
+                health = json.loads(r.read())
+            assert health["ok"] and health["model_version"] == 1
+
+            body = json.dumps(
+                {"rows": [{"idx": [0, 2], "val": [1.0, 2.0]}, {"idx": [1], "val": [1.0]}]}
+            ).encode()
+            req = urllib.request.Request(
+                f"{base}/predict", data=body, headers={"Content-Type": "application/json"}
+            )
+            with urllib.request.urlopen(req, timeout=10) as r:
+                out = json.loads(r.read())
+            np.testing.assert_allclose(out["margins"], [2.0, -1.0])
+            assert out["labels"] == [1.0, -1.0]
+            assert out["model_version"] == 1
+
+            with urllib.request.urlopen(f"{base}/stats", timeout=10) as r:
+                stats = json.loads(r.read())
+            assert stats["service"]["rows_served"] == 2
+            assert stats["store"]["version"] == 1
+
+            bad = urllib.request.Request(f"{base}/predict", data=b"{}")
+            with pytest.raises(urllib.error.HTTPError) as e:
+                urllib.request.urlopen(bad, timeout=10)
+            assert e.value.code == 400
+        finally:
+            server.shutdown()
+
+
+# ---------------- Session.step_stream ----------------
+
+
+def test_step_stream_is_deterministic():
+    spec = stream_spec(rounds=8)
+    runs = []
+    for _ in range(2):
+        sess = Session(spec)
+        while not sess.done:
+            sess.step_stream(make_stream_source(spec))
+        runs.append((sess.current_x(), list(sess.losses)))
+    assert np.array_equal(runs[0][0], runs[1][0])  # bitwise
+    assert runs[0][1] == runs[1][1]
+
+
+def test_step_stream_chunking_never_changes_the_trace():
+    spec = stream_spec(rounds=8)
+    a = Session(spec)
+    while not a.done:
+        a.step_stream(make_stream_source(spec))  # default chunks
+    b = Session(spec)
+    src = make_stream_source(spec)
+    while not b.done:
+        b.step_stream(src, 1)  # one round at a time, one shared source
+    assert np.array_equal(a.current_x(), b.current_x())
+    assert a.losses == b.losses
+
+
+def test_step_stream_through_a_feed_matches_bare_source():
+    spec = stream_spec(rounds=6, loss_every=3)
+    a = Session(spec)
+    while not a.done:
+        a.step_stream(make_stream_source(spec))
+    b = Session(spec)
+    with StreamFeed(make_stream_source(spec), capacity=4) as feed:
+        while not b.done:
+            b.step_stream(feed, 1)
+    assert np.array_equal(a.current_x(), b.current_x())
+
+
+def test_resume_mid_stream_is_bitwise(tmp_path):
+    spec = dataclasses.replace(stream_spec(rounds=12), faults=FaultPolicy(autosave_every=4))
+    ref = Session(spec)
+    while not ref.done:
+        ref.step_stream(make_stream_source(spec))
+
+    interrupted = Session(spec, autosave_dir=tmp_path)
+    interrupted.step_stream(make_stream_source(spec), 7)  # autosave hit at 4
+    resumed = Session.restore(
+        interrupted.autosave_path, spec=spec, autosave_dir=tmp_path
+    )
+    assert resumed.rounds_done == 4  # last durable boundary
+    # re-attach the (replaying) source at the restored round: no
+    # duplicated and no dropped micro-batch, by construction
+    while not resumed.done:
+        resumed.step_stream(make_stream_source(spec))
+    assert np.array_equal(ref.current_x(), resumed.current_x())
+    assert ref.losses == resumed.losses
+
+
+def test_step_stream_desync_raises():
+    spec = stream_spec(rounds=8)
+    sess = Session(spec)
+    src = make_stream_source(spec)
+
+    class OffByOne:
+        def micro_batches(self, start=0):
+            return src.micro_batches(start + 1)
+
+    with pytest.raises(StreamDesyncError, match="duplicated, dropped"):
+        sess.step_stream(OffByOne(), 1)
+
+
+def test_step_stream_rejects_wrong_batch_size():
+    spec = stream_spec(rounds=8)
+    sess = Session(spec)
+    wrong = DriftStream(n=4736, rows=32, seed=3)  # round needs 64
+    with pytest.raises(ValueError, match="p_r·τ·b"):
+        sess.step_stream(wrong, 1)
+
+
+def test_step_stream_honors_budget_and_stop():
+    spec = stream_spec(rounds=6, loss_every=3)
+    sess = Session(spec)
+    ev = sess.step_stream(make_stream_source(spec), 100)  # capped at budget
+    assert ev.rounds_done == 6 and ev.stop == "rounds"
+    assert sess.done
+    with pytest.raises(RuntimeError, match="finished"):
+        sess.step_stream(make_stream_source(spec), 1)
+
+
+def test_step_stream_samples_loss_on_boundaries():
+    spec = stream_spec(rounds=8, loss_every=4)
+    sess = Session(spec)
+    src = make_stream_source(spec)
+    ev1 = sess.step_stream(src)  # default: to the next boundary
+    assert sess.rounds_done == 4 and ev1.loss is not None
+    assert len(sess.losses) == 1
+    sess.step_stream(src)
+    assert len(sess.losses) == 2
+
+
+def test_offline_sessions_never_touch_the_stream_plane():
+    """A stream-less spec steps through step_rounds exactly as before —
+    and step_stream is a loud error, not a silent no-data loop."""
+    spec = ExperimentSpec(dataset="rcv1-sm", schedule=sched(rounds=4), mesh=MESH)
+    sess = Session(spec)
+    ev = sess.step_rounds(4)
+    assert ev.rounds_done == 4
+    with pytest.raises(ValueError, match="no stream"):
+        make_stream_source(spec)
+
+
+# ---------------- OnlineController ----------------
+
+
+def test_controller_end_to_end_with_service(tmp_path):
+    spec = stream_spec(rounds=12, swap_every=4, drift_at=6)
+    store = ModelStore()
+    with PredictionService(store) as svc:
+        ctrl = OnlineController(
+            Session(spec), make_stream_source(spec), store, service=svc,
+            swap_dir=tmp_path,
+        )
+        assert store.version == 1  # serving from round 0
+        # predictions answer during training/swaps
+        src = make_stream_source(spec)
+        m = None
+        for _ in range(3):
+            ctrl.run(4)
+            b = src.batch(ctrl.session.rounds_done)
+            res = svc.predict(b.indices, b.values)
+            assert res.margins.shape == (64,)
+        m = ctrl.metrics()
+    assert m.rounds_done == 12
+    assert m.swaps >= 3  # one per swap_every boundary at least
+    assert m.failed_swaps == 0
+    assert m.staleness_rounds == 0  # final swap caught the store up
+    assert m.predictions_served == 3 * 64
+    # swap checkpoints are real integrity-hashed checkpoints on disk
+    assert ctrl.swap_rounds and all(
+        (tmp_path / f"swap-{r}").with_suffix(".npz").exists() for r in ctrl.swap_rounds
+    )
+
+
+def test_controller_swap_cadence_follows_the_spec():
+    spec = stream_spec(rounds=8, swap_every=2)
+    ctrl = OnlineController(Session(spec), make_stream_source(spec), ModelStore())
+    ctrl.run()
+    assert ctrl.swap_rounds == [2, 4, 6, 8]
+
+
+def test_controller_matches_bare_session_bitwise(tmp_path):
+    """The controller's swap machinery (save/load every k rounds) must
+    never perturb training: same weights as a bare step_stream loop."""
+    spec = stream_spec(rounds=8, swap_every=2)
+    bare = Session(spec)
+    while not bare.done:
+        bare.step_stream(make_stream_source(spec))
+    ctrl = OnlineController(Session(spec), make_stream_source(spec), ModelStore(),
+                            swap_dir=tmp_path)
+    ctrl.run()
+    assert np.array_equal(bare.current_x(), ctrl.session.current_x())
+    # and the served model IS the trained model
+    assert np.array_equal(ctrl.store.snapshot().x, bare.current_x())
+
+
+def test_controller_recovers_from_drift(tmp_path):
+    """The ISSUE's end-to-end criterion: accuracy against the *current*
+    concept collapses at the drift and recovers without a restart."""
+    spec = ExperimentSpec(
+        dataset="rcv1-sm",
+        schedule=sched(rounds=120, loss_every=0),
+        mesh=MESH,
+        stream=StreamSpec(source="drift", seed=3, drift_at=60, swap_every=8),
+    )
+    src = make_stream_source(spec)
+    post_twin = dataclasses.replace(src, drift_at=1)  # always-new-concept probe
+    ctrl = OnlineController(Session(spec), src, ModelStore(), swap_dir=tmp_path)
+
+    def acc_new(r):
+        vals = []
+        for k in range(4):
+            b = post_twin.batch(50_000 + 10 * r + k)
+            m = np.einsum(
+                "rw,rw->r", ctrl.session.current_x()[b.indices], b.values
+            )
+            vals.append(np.mean(np.where(m >= 0, 1.0, -1.0) == b.y))
+        return float(np.mean(vals))
+
+    ctrl.run(60)
+    at_drift = acc_new(60)  # the old model scored against the new concept
+    ctrl.run(60)
+    recovered = acc_new(120)
+    assert at_drift < 0.5  # the flip inverted every learned margin
+    assert recovered > 0.55  # adapted online, same process, no restart
+    assert ctrl.metrics().failed_swaps == 0
