@@ -1,0 +1,118 @@
+"""Benchmark regression gate — fresh results vs committed baselines.
+
+    python benchmarks/check_regression.py FRESH BASELINE [FRESH2 BASELINE2 ...] [--tol 10]
+
+Compares every numeric leaf a baseline JSON carries against the same
+leaf in a freshly produced benchmark JSON (``BENCH_*.json`` from e.g.
+``benchmarks.bench_serve``). The gate is deliberately loose — an
+order-of-magnitude ratio (default ``--tol 10``) — because CI machines
+vary wildly in speed; what it catches is the catastrophic class of
+regression (a 50× throughput collapse, a metric that stopped being
+produced), not a 20% wobble.
+
+Rules, per baseline leaf:
+
+* numbers must exist in the fresh file and satisfy
+  ``1/tol ≤ fresh/baseline ≤ tol`` (both ≈0 passes; exactly one ≈0
+  fails — the signal died);
+* strings must match exactly (they name what was measured);
+* ``null`` / booleans are skipped (e.g. adapt-round fields that vary
+  run to run);
+* a baseline key missing from the fresh file fails — a metric that
+  disappeared is a regression even when everything else is fast.
+
+Keys present only in the fresh file are ignored, so adding metrics
+never breaks the gate. Exits nonzero listing every violation.
+
+Stdlib-only on purpose: the gate must run before (and regardless of)
+any environment the benchmarks themselves need.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ZERO = 1e-12
+
+
+def compare(fresh, base, tol: float, path: str = "") -> list[str]:
+    """Violation strings for every baseline leaf the fresh tree fails."""
+    where = path or "<root>"
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            return [f"{where}: baseline is an object, fresh is {type(fresh).__name__}"]
+        out = []
+        for k, bv in base.items():
+            sub = f"{path}.{k}" if path else k
+            if k not in fresh:
+                out.append(f"{sub}: missing from fresh results")
+                continue
+            out += compare(fresh[k], bv, tol, sub)
+        return out
+    if isinstance(base, list):
+        if not isinstance(fresh, list) or len(fresh) != len(base):
+            return [f"{where}: list shape changed ({base!r} → {fresh!r})"]
+        out = []
+        for i, bv in enumerate(base):
+            out += compare(fresh[i], bv, tol, f"{where}[{i}]")
+        return out
+    if base is None or isinstance(base, bool):
+        return []  # run-to-run varying fields; not gated
+    if isinstance(base, str):
+        return [] if fresh == base else [f"{where}: {base!r} → {fresh!r}"]
+    # numeric leaf
+    if not isinstance(fresh, (int, float)) or isinstance(fresh, bool):
+        return [f"{where}: baseline {base!r} is numeric, fresh is {fresh!r}"]
+    b, f = float(base), float(fresh)
+    if abs(b) <= ZERO and abs(f) <= ZERO:
+        return []
+    if abs(b) <= ZERO or abs(f) <= ZERO:
+        return [f"{where}: {b:g} → {f:g} (signal vanished)"]
+    if b * f < 0:
+        return [f"{where}: sign flipped ({b:g} → {f:g})"]
+    ratio = f / b
+    if not (1.0 / tol <= ratio <= tol):
+        return [f"{where}: {b:g} → {f:g} (ratio {ratio:.3g} outside [1/{tol:g}, {tol:g}])"]
+    return []
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="check_regression", description="gate fresh benchmark JSON on baselines"
+    )
+    ap.add_argument("pairs", nargs="+", metavar="FRESH BASELINE",
+                    help="alternating fresh-results / committed-baseline paths")
+    ap.add_argument("--tol", type=float, default=10.0,
+                    help="allowed fresh/baseline ratio band [1/tol, tol] (default 10)")
+    args = ap.parse_args(argv)
+    if args.tol <= 1.0:
+        ap.error(f"--tol {args.tol} must be > 1")
+    if len(args.pairs) % 2:
+        ap.error("paths come in FRESH BASELINE pairs")
+
+    failed = False
+    for i in range(0, len(args.pairs), 2):
+        fresh_p, base_p = Path(args.pairs[i]), Path(args.pairs[i + 1])
+        try:
+            fresh = json.loads(fresh_p.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[gate ] FAIL {fresh_p}: unreadable fresh results ({e})")
+            failed = True
+            continue
+        base = json.loads(base_p.read_text())
+        problems = compare(fresh, base, args.tol)
+        if problems:
+            failed = True
+            print(f"[gate ] FAIL {fresh_p} vs {base_p}:")
+            for p in problems:
+                print(f"        {p}")
+        else:
+            print(f"[gate ] ok   {fresh_p} vs {base_p} (tol {args.tol:g}×)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

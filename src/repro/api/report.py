@@ -104,6 +104,8 @@ class RunReport:
             comm += f", counted {self.ledger.counted_words()['total_words']:.3g}"
             if self.ledger.seconds_per_round is not None:
                 comm += f", measured {self.ledger.seconds_per_round:.3g} s/round"
+            if self.ledger.exposed_comm_s is not None:
+                comm += f", exposed {self.ledger.exposed_comm_s:.3g} s"
         return (
             f"{self.spec.name or self.spec.dataset} [{self.backend}]{obj} "
             f"s={sched.s} b={sched.b} τ={sched.tau} p_r×p_c="

@@ -44,11 +44,12 @@ from repro.api.plan import Plan, plan, replan_mesh
 from repro.api.report import RunReport, modeled_comm_words
 from repro.api.spec import ExperimentSpec, MeshSpec
 from repro.core import faults
-from repro.core.comm import MESH, TIMED, CommLedger
+from repro.core.comm import MESH, TIMED, CommLedger, time_phase
 from repro.core.engine import engine_comm_ledger, engine_loss, run_engine_chunk
 from repro.core.distributed import HybridDriver
 from repro.core.problem import problem_loss
 from repro.core.teams import global_problem
+from repro.obs import trace as obs_trace
 from repro.train.checkpoint import (
     SessionCheckpoint,
     load_session_checkpoint,
@@ -205,6 +206,61 @@ class Session:
             self.ledger.add_rounds(k)
         self.rounds_done += k
 
+    def _sync(self) -> None:
+        """Block on the backend carry without a host copy."""
+        if self._driver is not None:
+            self._driver.sync()
+        else:
+            jax.block_until_ready(self._x)
+
+    def _traced_advance(self, sub: int, first: bool, stream_batch=None) -> None:
+        """One sub-chunk through the tracing seam: untraced, exactly the
+        bare advance (the bitwise-identical default path); traced, the
+        same advance wrapped in a host-side span, blocking at the span
+        edge so the recorded wall covers the dispatched work (observer
+        effect on timing only — the compiled numerics are untouched)."""
+        rec = obs_trace.active()
+        if rec is None:
+            if stream_batch is not None:
+                self._advance_stream(stream_batch)
+            else:
+                self._advance(sub)
+            return
+        with rec.span(
+            "compile" if first else "round",
+            name=f"rounds[{self.rounds_done}+{sub}]",
+            start_round=self.rounds_done,
+            rounds=sub,
+        ):
+            if stream_batch is not None:
+                self._advance_stream(stream_batch)
+            else:
+                self._advance(sub)
+            self._sync()
+
+    def _measure_phases(self) -> None:
+        """Populate ``ledger.phase_seconds`` (→ ``exposed_comm_s``) once
+        per timed run: the §6.5 phase split, measured by separate jitted
+        probes over the round's real payload shapes — the training step
+        itself is never split or re-traced. Runs outside the wall/compile
+        accounting windows; each probed phase also lands as a trace span
+        when a recorder is installed."""
+        from repro.core.engine import engine_phase_probes
+
+        if self._driver is not None:
+            probes = self._driver.phase_probes()
+        else:
+            probes = engine_phase_probes(self.bundle.team, self.spec.schedule)
+        rec = obs_trace.active()
+        phases = {}
+        for name, (fn, args, calls) in probes.items():
+            per_call = time_phase(fn, *args)
+            phases[name] = per_call * calls
+            if rec is not None:
+                rec.add_span(name, f"probe:{name}", dur=phases[name],
+                             per_call_s=per_call, calls_per_round=calls)
+        self.ledger.set_phase_seconds(phases)
+
     def _sample_loss(self) -> float:
         if self._driver is not None:
             return self._driver.loss()
@@ -264,7 +320,7 @@ class Session:
                 sub = 1
             first = self._first_chunk_pending
             tc = time.perf_counter()
-            self._advance(sub)
+            self._traced_advance(sub, first)
             sampled = None
             if sched.loss_every and self.rounds_done % sched.loss_every == 0:
                 sampled = self._sample_loss()  # blocks (device → float)
@@ -292,6 +348,10 @@ class Session:
         if not synced:
             self.current_x()  # block: wall covers all dispatched work
         self.wall_time_s += time.perf_counter() - t0
+        if self.spec.comm_timing and not self.ledger.phase_seconds:
+            # after the wall accrual so probe time never masquerades as
+            # solve/compile time.
+            self._measure_phases()
 
         return RoundEvent(
             rounds_done=self.rounds_done,
@@ -412,7 +472,11 @@ class Session:
         autosaving = self.autosave_dir is not None and autosave_every > 0
         t0 = time.perf_counter()
         while k > 0 and self.stop_reason is None:
-            batch = self._next_stream_batch(source)
+            # the span measures consumer-side stall: how long the
+            # trainer waited on the feed for this round's batch.
+            with obs_trace.span("ingest", name=f"batch[{self.rounds_done}]",
+                                index=self.rounds_done):
+                batch = self._next_stream_batch(source)
             if batch.index != self.rounds_done:
                 raise StreamDesyncError(
                     f"micro-batch index {batch.index} != session round "
@@ -422,7 +486,7 @@ class Session:
                 )
             first = self._first_chunk_pending
             tc = time.perf_counter()
-            self._advance_stream(batch)
+            self._traced_advance(1, first, stream_batch=batch)
             sampled = None
             if sched.loss_every and self.rounds_done % sched.loss_every == 0:
                 sampled = self._sample_loss()  # blocks (device → float)
@@ -448,6 +512,8 @@ class Session:
         if not synced:
             self.current_x()  # block: wall covers all dispatched work
         self.wall_time_s += time.perf_counter() - t0
+        if self.spec.comm_timing and not self.ledger.phase_seconds:
+            self._measure_phases()
 
         return RoundEvent(
             rounds_done=self.rounds_done,

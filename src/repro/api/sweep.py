@@ -40,6 +40,7 @@ import numpy as np
 from repro.api.report import RunReport
 from repro.api.spec import ExperimentSpec
 from repro.core import faults
+from repro.obs import metrics as obs_metrics
 from repro.train.checkpoint import (
     CheckpointCorruptError,
     SpecMismatchError,
@@ -196,8 +197,11 @@ def _run_point(spec, index: int, autosave_dir: Path | None, x0):
     policy = spec.faults
     attempts = 0
     rounds_done = 0
+    reg = obs_metrics.registry()
     while True:
         attempts += 1
+        if attempts > 1:
+            reg.counter("sweep.retries_total").inc()
         sess = None
         try:
             faults.poke("point", at=index)
@@ -246,6 +250,7 @@ def sweep(
     attempts_log: list[int] = []
     skipped: list[str] = []
     quarantined: list[QuarantineRecord] = []
+    reg = obs_metrics.registry()
     ran = 0
     for index, spec in enumerate(specs):
         if resume_dir is not None:
@@ -254,14 +259,18 @@ def sweep(
                 reports.append(RunReport.from_json(rec.read_text()))
                 resumed.append(True)
                 attempts_log.append(0)
+                reg.counter("sweep.points_resumed_total").inc()
                 continue
         if max_points is not None and ran >= max_points:
             skipped.append(spec.content_hash())
+            reg.counter("sweep.points_skipped_total").inc()
             continue
+        reg.counter("sweep.points_total").inc()
         report, attempts, failure = _run_point(spec, index, resume_dir, x0)
         ran += 1
         if report is None:
             err, rounds_done = failure
+            reg.counter("sweep.quarantined_total").inc()
             quarantined.append(
                 QuarantineRecord(
                     spec_hash=spec.content_hash(),

@@ -68,6 +68,7 @@ __all__ = [
     "CommLedger",
     "CommRate",
     "capture_rates",
+    "time_phase",
 ]
 
 COLLECTIVE_KINDS = ("counting", "mesh", "timed")
@@ -121,11 +122,18 @@ class CommLedger:
                    it advances).
     round_seconds  per-round wall seconds, appended by the timed
                    executor; empty for counting/mesh runs.
+    phase_seconds  per-round seconds attributed to each §6.5 phase
+                   ("bundle_compute" / "allreduce_gv" / "param_avg"),
+                   measured once per timed run by the phase probes
+                   (separate jitted probes over the round's real payload
+                   shapes — the training step itself is never split, so
+                   its compiled numerics stay untouched).
     """
 
     rates: tuple[CommRate, ...] = ()
     rounds: int = 0
     round_seconds: list[float] = dataclasses.field(default_factory=list)
+    phase_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
 
     # ---- accumulation (driver-side) ----
 
@@ -135,12 +143,16 @@ class CommLedger:
     def add_round_seconds(self, dt: float) -> None:
         self.round_seconds.append(float(dt))
 
+    def set_phase_seconds(self, phases: dict[str, float]) -> None:
+        self.phase_seconds = {k: float(v) for k, v in phases.items()}
+
     def snapshot(self) -> "CommLedger":
         """An independent copy (what RoundEvent/RunReport carry)."""
         return CommLedger(
             rates=self.rates,
             rounds=self.rounds,
             round_seconds=list(self.round_seconds),
+            phase_seconds=dict(self.phase_seconds),
         )
 
     # ---- counted totals (span-1 collectives move nothing) ----
@@ -191,16 +203,33 @@ class CommLedger:
             return None
         return statistics.median(self.round_seconds)
 
+    @property
+    def exposed_comm_s(self) -> float | None:
+        """Communication time on the critical path over the committed
+        rounds: the per-round comm phases ("allreduce_gv" +
+        "param_avg") × rounds. Today nothing overlaps comm with
+        compute, so exposed equals total comm time; the overlap work
+        will shrink this while total stays — overlap efficiency is
+        1 − exposed/total. None until the phase probes have run."""
+        comm = [v for k, v in self.phase_seconds.items() if k != "bundle_compute"]
+        if not comm:
+            return None
+        return float(sum(comm)) * self.rounds
+
     # ---- serialization ----
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "rates": [r.to_dict() for r in self.rates],
             "rounds": self.rounds,
             "round_seconds": list(self.round_seconds),
             # derived, for human-readable reports (ignored on load)
             "counted": self.counted_words(),
         }
+        if self.phase_seconds:
+            d["phase_seconds"] = dict(self.phase_seconds)
+            d["exposed_comm_s"] = self.exposed_comm_s  # derived
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "CommLedger":
@@ -208,6 +237,9 @@ class CommLedger:
             rates=tuple(CommRate.from_dict(r) for r in d.get("rates", ())),
             rounds=int(d.get("rounds", 0)),
             round_seconds=[float(v) for v in d.get("round_seconds", ())],
+            phase_seconds={
+                k: float(v) for k, v in d.get("phase_seconds", {}).items()
+            },
         )
 
 
@@ -351,3 +383,18 @@ class Collectives:
 COUNTING = Collectives("counting")
 MESH = Collectives("mesh")
 TIMED = Collectives("timed")
+
+
+def time_phase(fn, *args, repeats: int = 5) -> float:
+    """Median wall seconds of one call to a compiled phase probe
+    (blocks on the result; one unmeasured warmup call absorbs the
+    compile). The §6.5 per-phase measurement primitive."""
+    import time as _time
+
+    jax.block_until_ready(fn(*args))  # warmup / compile
+    walls = []
+    for _ in range(int(repeats)):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        walls.append(_time.perf_counter() - t0)
+    return statistics.median(walls)

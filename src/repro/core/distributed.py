@@ -380,6 +380,7 @@ class HybridDriver:
         self.ledger = hybrid_comm_ledger(prob, sched, comm)
         self.ledger.rounds = self.rounds_done
         self._step = make_hybrid_step(mesh, prob, sched, comm=comm)
+        self._mesh = mesh
         data_sh = NamedSharding(mesh, P("rows", "cols"))
         self._data_sh = data_sh
         self._x_sh = NamedSharding(mesh, P("cols"))
@@ -421,6 +422,60 @@ class HybridDriver:
             self.ledger.add_round_seconds(time.perf_counter() - t0)
         self.rounds_done += 1
         self.ledger.rounds = self.rounds_done
+
+    def sync(self) -> None:
+        """Block until all dispatched rounds complete — no host copy.
+        The tracing seam uses this so a round span's wall covers the
+        work it dispatched (observer effect on timing only; the async
+        chain and its numerics are identical either way)."""
+        jax.block_until_ready(self._x_pad)
+
+    def phase_probes(self) -> dict:
+        """Jitted per-phase probes over this driver's real payload
+        shapes — the §6.5 phase split, measured *outside* the training
+        step so its compiled round body is never touched.
+
+        Returns ``{phase: (fn, args, calls_per_round)}``:
+
+          bundle_compute  one rank's local partial (G, v) over an
+                          (s·b, width) ELL bundle (Eq. 4's γ term);
+          allreduce_gv    the (s²b² + sb)-word psum over "cols" on the
+                          real mesh (Table 3's row-team payload);
+          param_avg       the n_loc-word pmean over "rows" (the column
+                          weight sync).
+
+        Probes run on zero-filled payloads of the true shapes — comm
+        cost is shape-dependent, data-independent.
+        """
+        sched, prob, mesh = self.sched, self.prob, self._mesh
+        sb = sched.s * sched.b
+        bundles = sched.tau // sched.s
+        gram_ = "blocked" if sched.gram == "pallas" else sched.gram
+        reps = -(-sb // prob.rows_local)
+        bi = jnp.tile(prob.indices[0, 0], (reps, 1))[:sb]
+        bv = jnp.tile(prob.values[0, 0], (reps, 1))[:sb]
+        x_loc = jnp.zeros((prob.n_loc,), jnp.float32)
+        compute = jax.jit(
+            lambda i, v, x: bundle_gram_v(i, v, x, prob.n_loc, gram=gram_, bk=sched.bk)
+        )
+        g0 = jnp.zeros((sb, sb), jnp.float32)
+        v0 = jnp.zeros((sb,), jnp.float32)
+        ar = jax.jit(shard_map(
+            lambda g, v: (jax.lax.psum(g, "cols"), jax.lax.psum(v, "cols")),
+            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        ))
+        xp = jax.device_put(
+            jnp.zeros(prob.p_c * prob.n_loc, jnp.float32), self._x_sh
+        )
+        pm = jax.jit(shard_map(
+            lambda x: jax.lax.pmean(x, "rows"),
+            mesh=mesh, in_specs=P("cols"), out_specs=P("cols"),
+        ))
+        return {
+            "bundle_compute": (compute, (bi, bv, x_loc), bundles),
+            "allreduce_gv": (ar, (g0, v0), bundles),
+            "param_avg": (pm, (xp,), 1),
+        }
 
     def gather(self) -> np.ndarray:
         """Current global weights (n,) — blocks on the dispatch chain."""

@@ -466,6 +466,42 @@ def engine_comm_ledger(
     return CommLedger(rates=rates)
 
 
+def engine_phase_probes(tp: TeamProblem, sched: ParallelSGDSchedule) -> dict:
+    """Jitted per-phase probes for the simulated backend — the §6.5
+    phase split (compute vs. the two comm phases) measured on the round
+    body's real payload shapes, *outside* the training step (its
+    compiled numerics are never touched).
+
+    Returns ``{phase: (fn, args, calls_per_round)}``. On this backend
+    the Gram "allreduce" is the identity (the simulated ranks already
+    hold globally reduced values) and the parameter average is a real
+    ``jnp.mean`` over the stacked team iterates — so the probed comm
+    phases measure what the one-device simulation actually pays, not
+    what a mesh would."""
+    sb = sched.s * sched.b
+    bundles = sched.tau // sched.s
+    m_local = int(tp.indices.shape[1])
+    reps = -(-sb // m_local)
+    bi = jnp.tile(tp.indices[0], (reps, 1))[:sb]
+    bv = jnp.tile(tp.values[0], (reps, 1))[:sb]
+    x0 = jnp.zeros((tp.n,), jnp.float32)
+    compute = jax.jit(
+        lambda i, v, x: bundle_gram_v(
+            i, v, x, tp.n, gram=sched.gram, bk=sched.bk, interpret=sched.interpret
+        )
+    )
+    g0 = jnp.zeros((sb, sb), jnp.float32)
+    v0 = jnp.zeros((sb,), jnp.float32)
+    ident = jax.jit(lambda g, v: (g + 0.0, v + 0.0))
+    xs = jnp.zeros((sched.p_r, tp.n), jnp.float32)
+    avg = jax.jit(lambda t: jnp.mean(t, axis=0))
+    return {
+        "bundle_compute": (compute, (bi, bv, x0), bundles),
+        "allreduce_gv": (ident, (g0, v0), bundles),
+        "param_avg": (avg, (xs,), 1),
+    }
+
+
 def single_team(problem: Problem) -> TeamProblem:
     """View a Problem as a 1-team TeamProblem (p_r = 1 corners); the
     objective rides along."""

@@ -20,6 +20,7 @@ paper pipeline and was removed; for transformer step benchmarks
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 import time
@@ -28,6 +29,9 @@ from pathlib import Path
 import numpy as np
 
 from repro.api import ExperimentSpec, Session
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import (
     DriftStream,
     ModelStore,
@@ -61,6 +65,10 @@ def main(argv=None) -> int:
                     help="probe served accuracy every N rounds (0 = off)")
     ap.add_argument("--swap-dir", default=None, help="where swap checkpoints land")
     ap.add_argument("--out", default=None, help="write final metrics JSON here")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the run through the repro.obs tracing seam "
+                         "and write a Chrome trace-event JSON here (loads in "
+                         "Perfetto; a .jsonl event log lands beside it)")
     args = ap.parse_args(argv)
 
     spec = ExperimentSpec.from_json(Path(args.spec).read_text())
@@ -71,7 +79,13 @@ def main(argv=None) -> int:
     session = Session(spec)
     store = ModelStore()
     http_server = None
-    with PredictionService(store) as service:
+    # the recorder installs as the module-global fallback too, so spans
+    # from the feed producer and predict-batcher threads land in it.
+    recorder = obs_trace.TraceRecorder() if args.trace else None
+    with contextlib.ExitStack() as stack:
+        if recorder is not None:
+            stack.enter_context(obs_trace.install(recorder))
+        service = stack.enter_context(PredictionService(store))
         if args.port is not None:
             http_server, _ = serve_http(service, port=args.port)
             host, port = http_server.server_address[:2]
@@ -123,6 +137,13 @@ def main(argv=None) -> int:
             print(f"[out  ] {args.out}")
         if http_server is not None:
             http_server.shutdown()
+    if recorder is not None:
+        out = Path(args.trace)
+        obs_export.write_chrome_trace(
+            recorder, out, metrics=obs_metrics.registry().snapshot()
+        )
+        obs_export.write_jsonl(recorder, out.with_suffix(".jsonl"))
+        print(obs_export.summary_line(recorder), flush=True)
     return 0
 
 

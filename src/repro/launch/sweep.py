@@ -36,6 +36,11 @@ report.json`` fits Hockney constants from such a prior run
 printing the re-ranked prediction table. ``--calibrate`` requires
 ``--plan-only``: calibration re-ranks predictions, it never changes
 what runs.
+
+``--trace out.json`` records the whole run through the ``repro.obs``
+span seam and writes a Perfetto-loadable Chrome trace (plus a
+``out.jsonl`` event log), printing a greppable ``[trace]`` summary
+line — the observability twin of ``--timed``.
 """
 
 from __future__ import annotations
@@ -47,6 +52,9 @@ from pathlib import Path
 
 from repro.api import ExperimentSpec, RunReport, calibrate, plan, sweep
 from repro.core.objective import OBJECTIVES
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def load_specs(path: Path) -> list[ExperimentSpec]:
@@ -127,12 +135,19 @@ def main(argv: list[str] | None = None) -> None:
                          "against the fitted machine instead of the preset "
                          "(requires --plan-only: calibration re-ranks "
                          "predictions, it does not change what runs)")
+    ap.add_argument("--trace", type=Path, default=None, metavar="OUT.json",
+                    help="record the run through the repro.obs tracing seam "
+                         "and write a Chrome trace-event JSON here (loads in "
+                         "Perfetto / chrome://tracing; a .jsonl event log "
+                         "lands beside it)")
     args = ap.parse_args(argv)
     if args.calibrate is not None and not args.plan_only:
         # without this, the printed calibrated plans (incl. autotuned
         # schedules) would diverge from what the sweep then executes —
         # the run path plans with the preset machine.
         ap.error("--calibrate requires --plan-only")
+    if args.trace is not None and args.plan_only:
+        ap.error("--trace records a run — drop --plan-only")
 
     specs = load_specs(args.spec)
     override = {}
@@ -172,7 +187,16 @@ def main(argv: list[str] | None = None) -> None:
         _finish(args, records, f"{len(records)} spec(s) planned")
         return
 
-    result = sweep(specs, resume_dir=args.resume, max_points=args.max_points)
+    if args.trace is not None:
+        with obs_trace.install() as rec:
+            result = sweep(specs, resume_dir=args.resume, max_points=args.max_points)
+        obs_export.write_chrome_trace(
+            rec, args.trace, metrics=obs_metrics.registry().snapshot()
+        )
+        obs_export.write_jsonl(rec, args.trace.with_suffix(".jsonl"))
+        print(obs_export.summary_line(rec), flush=True)
+    else:
+        result = sweep(specs, resume_dir=args.resume, max_points=args.max_points)
     for rep, was_resumed in zip(result.reports, result.resumed):
         tag = "skip " if was_resumed else "run  "
         print(f"[{tag}] {rep.summary()}", flush=True)

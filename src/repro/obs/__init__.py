@@ -1,0 +1,23 @@
+"""repro.obs — the observability plane.
+
+``trace``    Span/TraceRecorder seam (contextmanager + ContextVar,
+             inert when uninstalled) with the closed span-category set.
+``metrics``  process-wide registry of typed Counter/Gauge/Histogram
+             instruments with labeled snapshots and deltas.
+``export``   Chrome trace-event JSON (Perfetto-loadable) and JSONL
+             event-log export, both schema-versioned.
+"""
+
+from repro.obs.metrics import MetricsRegistry, registry
+from repro.obs.trace import SPAN_CATEGORIES, Span, TraceRecorder, active, install, span
+
+__all__ = [
+    "MetricsRegistry",
+    "SPAN_CATEGORIES",
+    "Span",
+    "TraceRecorder",
+    "active",
+    "install",
+    "registry",
+    "span",
+]

@@ -33,12 +33,19 @@ from pathlib import Path
 
 __all__ = ["StageMetrics", "OnlineController"]
 
+from repro.obs import metrics as obs_metrics
 from repro.serve.stream import StreamFeed
 
 
 @dataclasses.dataclass(frozen=True)
 class StageMetrics:
-    """One snapshot of the three stages (ingest / train / serve)."""
+    """One snapshot of the three stages (ingest / train / serve).
+
+    Based on the ``repro.obs`` metrics registry: every field is also a
+    registry gauge (``serve.stage.<field>``), published whenever the
+    controller takes a snapshot, so the serving stages share the one
+    process-wide telemetry home with train/sweep. ``to_dict()`` keys are
+    unchanged (``bench_serve`` and the serve CLI read them)."""
 
     rounds_done: int
     rounds_per_sec: float
@@ -51,6 +58,13 @@ class StageMetrics:
     model_version: int
     swaps: int
     failed_swaps: int
+
+    def publish(self, registry: obs_metrics.MetricsRegistry | None = None) -> None:
+        """Mirror every (non-None) field into ``serve.stage.*`` gauges."""
+        reg = obs_metrics.registry() if registry is None else registry
+        for field, value in dataclasses.asdict(self).items():
+            if value is not None:
+                reg.gauge(f"serve.stage.{field}").set(value)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -182,7 +196,7 @@ class OnlineController:
     def metrics(self) -> StageMetrics:
         svc = self.service.stats() if self.service is not None else None
         snap = self.store.snapshot()
-        return StageMetrics(
+        m = StageMetrics(
             rounds_done=self.session.rounds_done,
             rounds_per_sec=(
                 self._rounds_run / self._train_seconds if self._train_seconds else 0.0
@@ -197,3 +211,5 @@ class OnlineController:
             swaps=self.store.swaps,
             failed_swaps=self.store.failed_swaps,
         )
+        m.publish()
+        return m

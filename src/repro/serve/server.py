@@ -29,6 +29,9 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 __all__ = ["PredictResult", "PredictionService", "serve_http"]
 
 
@@ -144,18 +147,24 @@ class PredictionService:
             self._answer(batch)
 
     def _answer(self, batch: list[_Pending]) -> None:
+        # runs on the batcher thread: spans land via the trace seam's
+        # module-level fallback; counters feed the serve gauges too.
+        reg = obs_metrics.registry()
+        total_rows = sum(p.indices.shape[0] for p in batch)
         try:
-            width = max(p.indices.shape[1] for p in batch)
-            idx = np.zeros((sum(p.indices.shape[0] for p in batch), width), np.int32)
-            val = np.zeros_like(idx, dtype=np.float32)
-            r = 0
-            for p in batch:
-                b, w = p.indices.shape
-                idx[r : r + b, :w] = p.indices
-                val[r : r + b, :w] = p.values
-                r += b
-            margins, version = self.store.predict(idx, val)
-            labels = np.where(margins >= 0.0, 1.0, -1.0).astype(np.float32)
+            with obs_trace.span("predict_batch", name=f"batch[{self.batches}]",
+                                rows=int(total_rows), requests=len(batch)):
+                width = max(p.indices.shape[1] for p in batch)
+                idx = np.zeros((total_rows, width), np.int32)
+                val = np.zeros_like(idx, dtype=np.float32)
+                r = 0
+                for p in batch:
+                    b, w = p.indices.shape
+                    idx[r : r + b, :w] = p.indices
+                    val[r : r + b, :w] = p.values
+                    r += b
+                margins, version = self.store.predict(idx, val)
+                labels = np.where(margins >= 0.0, 1.0, -1.0).astype(np.float32)
             r = 0
             for p in batch:
                 b = p.indices.shape[0]
@@ -167,8 +176,12 @@ class PredictionService:
                 r += b
             self.rows_served += r
             self.batches += 1
+            reg.counter("serve.rows_served_total").inc(r)
+            reg.counter("serve.batches_total").inc()
+            reg.histogram("serve.batch_rows").observe(r)
         except BaseException as e:
             self.errors += 1
+            reg.counter("serve.errors_total").inc()
             for p in batch:
                 p.error = e
         finally:

@@ -22,6 +22,8 @@ import time
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train.checkpoint import load_model_weights
 
 __all__ = ["ModelSnapshot", "ModelStore"]
@@ -119,11 +121,15 @@ class ModelStore:
         Verification (manifest self-hash + payload sha256) happens
         before install; on ``CheckpointCorruptError`` the current model
         keeps serving untouched."""
+        reg = obs_metrics.registry()
         try:
-            x, meta = load_model_weights(path)
+            with obs_trace.span("swap", name=str(getattr(path, "name", path))):
+                x, meta = load_model_weights(path)
         except BaseException:
             self.failed_swaps += 1
+            reg.counter("serve.failed_swaps_total").inc()
             raise
+        reg.counter("serve.swaps_total").inc()
         return self.publish(
             x,
             rounds_done=int(meta.get("rounds_done", 0)),

@@ -41,6 +41,9 @@ from typing import Iterator, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 __all__ = [
     "MicroBatch",
     "StreamSource",
@@ -285,17 +288,26 @@ class StreamFeed:
     # ---- the two ends ----
 
     def _produce(self) -> None:
+        # runs on the producer thread: the trace seam's module-level
+        # fallback makes an install()-ed recorder visible here, and the
+        # queue-depth gauge is the serving plane's backpressure signal.
+        depth = obs_metrics.registry().gauge("stream.queue_depth")
         try:
-            for batch in self.source.micro_batches(self.start_index):
+            it = self.source.micro_batches(self.start_index)
+            while not self._stop.is_set():
+                with obs_trace.span("ingest", name="produce",
+                                    index=self.start_index + self.produced):
+                    batch = next(it)
                 while not self._stop.is_set():
                     try:
                         self._q.put(batch, timeout=0.05)
                         self.produced += 1
+                        depth.set(self._q.qsize())
                         break
                     except queue.Full:
                         continue  # backpressure: trainer is behind
-                if self._stop.is_set():
-                    return
+        except StopIteration:
+            return  # a finite source ran dry — a clean end of stream
         except BaseException as e:  # surfaced to the consumer on get()
             self._error = e
 
@@ -312,6 +324,7 @@ class StreamFeed:
                 f"produced={self.produced})"
             ) from None
         self.consumed += 1
+        obs_metrics.registry().gauge("stream.queue_depth").set(self._q.qsize())
         return batch
 
     # ---- per-stage metrics ----

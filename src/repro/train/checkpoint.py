@@ -42,6 +42,7 @@ import jax
 import numpy as np
 
 from repro.core import faults
+from repro.obs import trace as obs_trace
 
 
 class SpecMismatchError(ValueError):
@@ -255,7 +256,8 @@ def save_session_checkpoint(
         "losses": np.asarray(losses, np.float32),
     }
     path = Path(path)
-    _write_atomic(path, payload, manifest)
+    with obs_trace.span("ckpt_save", name=path.name, rounds_done=int(rounds_done)):
+        _write_atomic(path, payload, manifest)
     # chaos seam: a "save"-site ckpt_truncate tears the durable payload
     # here — the integrity hash must catch it on the next restore.
     faults.poke("save", at=int(rounds_done), path=path.with_suffix(".npz"))
@@ -272,8 +274,9 @@ def load_session_checkpoint(
     ``to_dict()``) upgrades that error from bare hashes to the first
     differing spec field."""
     path = Path(path)
-    npz, manifest = _require_pair(path)
-    meta = _read_manifest(manifest, npz)
+    with obs_trace.span("ckpt_verify", name=path.name):
+        npz, manifest = _require_pair(path)
+        meta = _read_manifest(manifest, npz)
     if meta.get("format") != _SESSION_FORMAT:
         raise CheckpointCorruptError(
             f"{path}: not a session checkpoint (format={meta.get('format')!r})"
@@ -323,8 +326,9 @@ def load_model_weights(path: str | os.PathLike) -> tuple[np.ndarray, dict]:
     Session is rebuilt: the returned manifest dict carries the spec,
     its hash, and ``rounds_done`` for staleness accounting."""
     path = Path(path)
-    npz, manifest = _require_pair(path)
-    meta = _read_manifest(manifest, npz)
+    with obs_trace.span("ckpt_verify", name=path.name):
+        npz, manifest = _require_pair(path)
+        meta = _read_manifest(manifest, npz)
     if meta.get("format") != _SESSION_FORMAT:
         raise CheckpointCorruptError(
             f"{path}: not a session checkpoint (format={meta.get('format')!r})"
