@@ -36,26 +36,32 @@ from repro.costmodel import MACHINES
 
 OUT_JSON = Path("BENCH_comm.json")
 
-# dataset × mesh grid: the four schedule corners appear as mesh limits
-# (pure row = FedAvg-style sync traffic, pure column = s-step-style Gram
-# traffic, square = both).
+# dataset × mesh × delay grid: the four schedule corners appear as mesh
+# limits (pure row = FedAvg-style sync traffic, pure column =
+# s-step-style Gram traffic, square = both); delay ≥ 1 points rerun a
+# p_c > 1 mesh with the DaSGD overlap pipeline so the exposed-vs-total
+# split is tracked over time.
 POINTS = [
-    ("rcv1-sm", 1, 1),
-    ("rcv1-sm", 4, 1),
-    ("rcv1-sm", 1, 4),
-    ("rcv1-sm", 2, 2),
-    ("uniform-sm", 2, 2),
-    ("uniform-sm", 2, 4),
+    ("rcv1-sm", 1, 1, 0),
+    ("rcv1-sm", 4, 1, 0),
+    ("rcv1-sm", 1, 4, 0),
+    ("rcv1-sm", 2, 2, 0),
+    ("rcv1-sm", 2, 2, 1),
+    ("uniform-sm", 2, 2, 0),
+    ("uniform-sm", 2, 4, 0),
+    ("uniform-sm", 2, 4, 2),
 ]
 
 
-def _spec(dataset: str, p_r: int, p_c: int, backend: str) -> ExperimentSpec:
+def _spec(dataset: str, p_r: int, p_c: int, delay: int, backend: str) -> ExperimentSpec:
     return ExperimentSpec(
         dataset=dataset,
-        schedule=ParallelSGDSchedule.hybrid(p_r, 2, 8, 0.05, 8, rounds=4),
+        schedule=ParallelSGDSchedule.hybrid(
+            p_r, 2, 8, 0.05, 8, rounds=4, delay=delay
+        ),
         mesh=MeshSpec(p_r=p_r, p_c=p_c, backend=backend),
         comm_timing=True,
-        name=f"comm/{dataset}/{p_r}x{p_c}/{backend}",
+        name=f"comm/{dataset}/{p_r}x{p_c}/d{delay}/{backend}",
     )
 
 
@@ -63,23 +69,30 @@ def run() -> None:
     records = []
     timed_reports = []
     n_dev = jax.device_count()
-    for dataset, p_r, p_c in POINTS:
+    for dataset, p_r, p_c, delay in POINTS:
         backend = "shard_map" if n_dev >= p_r * p_c else "simulated"
-        rep = api_run(_spec(dataset, p_r, p_c, backend))
+        rep = api_run(_spec(dataset, p_r, p_c, delay, backend))
         led = rep.ledger
         counted = led.counted_words()
         spr = led.seconds_per_round
         drift = counted["total_words"] - rep.comm_words["total_words"]
         emit(
-            f"comm/{dataset}/{p_r}x{p_c}",
+            f"comm/{dataset}/{p_r}x{p_c}/d{delay}",
             spr * 1e6,
             f"backend={backend} modeled={rep.comm_words['total_words']:.0f}w "
             f"counted={counted['total_words']:.0f}w drift={drift:.0f}w",
+        )
+        emit(
+            f"comm/{dataset}/{p_r}x{p_c}/d{delay}/overlap",
+            led.exposed_comm_s * 1e6,
+            f"total_comm_us={led.total_comm_s * 1e6:.1f};"
+            f"efficiency={led.overlap_efficiency:.3f};delay={delay}",
         )
         timed_reports.append(rep)
         records.append({
             "dataset": dataset,
             "mesh": [p_r, p_c],
+            "delay": delay,
             "backend": backend,
             "modeled_words": rep.comm_words,
             "counted_words": counted,
@@ -88,6 +101,9 @@ def run() -> None:
             "measured_seconds_per_round": spr,
             "round_seconds": led.round_seconds,
             "wall_time_s": rep.wall_time_s,
+            "exposed_comm_s": led.exposed_comm_s,
+            "total_comm_s": led.total_comm_s,
+            "overlap_efficiency": led.overlap_efficiency,
         })
 
     # §6.5 in-process: fit constants from the measured points and place

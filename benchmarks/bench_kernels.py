@@ -10,35 +10,11 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.kernels.ell_gram import ell_gram_and_v
-from repro.kernels.ops import sparse_linear_op, sstep_gram_and_v
 from repro.kernels.ref import ell_gram_and_v_ref
-from repro.sparse.bsr import bsr_from_csr
-from repro.sparse.synthetic import make_skewed_csr
+from repro.kernels.sstep_inner import sstep_inner
 
 
 def run() -> None:
-    a = make_skewed_csr(512, 2048, 40, 1.0, seed=0)
-    bsr = bsr_from_csr(a)
-    emit(
-        "kernels/bsr/layout",
-        0.0,
-        f"tile=8x128;tiles_per_row={bsr.max_blocks};density={bsr.density:.3f};"
-        f"vmem_per_step_bytes={8 * 128 * 4 + 128 * 4 + 8 * 4}",
-    )
-    op = sparse_linear_op(a)
-    x = jnp.asarray(np.random.default_rng(0).standard_normal(2048).astype(np.float32))
-    t = time_fn(lambda: op.matvec(x), repeats=3, warmup=1)
-    emit("kernels/bsr/matvec-interp", t * 1e6, "y=Ax 512x2048 interpret-mode")
-    u = jnp.asarray(np.random.default_rng(1).standard_normal(512).astype(np.float32))
-    t = time_fn(lambda: op.rmatvec(u), repeats=3, warmup=1)
-    emit("kernels/bsr/rmatvec-interp", t * 1e6, "g=ATu via BSR(AT) forward kernel")
-
-    y = jnp.asarray(np.random.default_rng(2).standard_normal((128, 4096)).astype(np.float32))
-    xx = jnp.asarray(np.random.default_rng(3).standard_normal(4096).astype(np.float32))
-    t = time_fn(lambda: sstep_gram_and_v(y, xx, bk=512), repeats=3, warmup=1)
-    vmem = 128 * 512 * 4 + 128 * 128 * 4 + 512 * 4
-    emit("kernels/gram/fused-interp", t * 1e6, f"sb=128 n=4096 bk=512;vmem_bytes={vmem}")
-
     # ---- engine bundle primitive: Pallas ELL-Gram vs dense-reference ----
     # The engine's inner loop runs the scatter-free ELL path; the dense
     # scatter (the retired pre-engine path, kernels/ref.py) is the
@@ -62,4 +38,18 @@ def run() -> None:
             0.0,
             f"{tag};dense_over_pallas={t_dense / max(t_pallas, 1e-12):.2f}x;"
             f"hbm_bytes_dense={sb * n * 4};vmem_bytes_pallas={sb * 512 * 4 + sb * sb * 4}",
+        )
+
+    # ---- fused s-step correction loop (VMEM-resident G, v, u) ----
+    for s, b in [(4, 16), (8, 16)]:
+        sb = s * b
+        rng = np.random.default_rng(11)
+        y = rng.standard_normal((sb, 512)).astype(np.float32)
+        g = jnp.asarray(np.tril(y @ y.T, -1))
+        v = jnp.asarray(rng.standard_normal(sb).astype(np.float32))
+        t = time_fn(lambda: sstep_inner(g, v, s, b, 0.1), repeats=3, warmup=1)
+        emit(
+            f"kernels/sstep-inner/{sb}",
+            t * 1e6,
+            f"s={s};b={b};vmem_bytes={sb * sb * 4 + 2 * sb * 4}",
         )

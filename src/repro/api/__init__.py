@@ -30,7 +30,7 @@ from repro.api.spec import (
 )
 from repro.api.plan import Plan, plan, replan_mesh
 from repro.api.report import RunReport, modeled_comm_words
-from repro.api.run import ProblemBundle, build_problem, run
+from repro.api.run import ProblemBundle, build_problem, run, run_decaying_tau
 from repro.api.session import RoundEvent, Session, autosave_base
 from repro.api.sweep import QuarantineRecord, SweepReport, sweep
 from repro.core.comm import CommLedger
@@ -56,6 +56,7 @@ __all__ = [
     "ProblemBundle",
     "build_problem",
     "run",
+    "run_decaying_tau",
     "RoundEvent",
     "Session",
     "autosave_base",

@@ -14,7 +14,12 @@ import dataclasses
 import math
 
 from repro.costmodel.calibrate import Calibration
-from repro.costmodel.hockney import CostBreakdown, HybridConfig, hybrid_epoch_cost
+from repro.costmodel.hockney import (
+    CostBreakdown,
+    HybridConfig,
+    hybrid_epoch_cost,
+    recommend_delay,
+)
 from repro.costmodel.machines import MACHINES, Machine
 from repro.costmodel.optimum import classify_regime, joint_sb_star
 from repro.api.spec import ExperimentSpec, dataset_stats
@@ -34,6 +39,13 @@ class Plan:
     balance   bandwidth-balance ratio (s-1)·s·b²·τ·p_c / 2n.
     s_star, b_star   raw Eq. 5–6 optima (before integer snapping);
               None when autotune is off.
+    recommended_delay   the model's suggested DaSGD staleness D — the
+              smallest D whose overlap window covers the Gram-phase
+              comm (0 when the mesh has no column shards to reduce
+              over). Advisory: ``plan`` never rewrites the schedule's
+              ``delay`` (staleness changes the iterates, so opting in
+              is the user's call — unlike the loss-neutral (s, b)
+              autotune).
     """
 
     spec: ExperimentSpec
@@ -44,10 +56,16 @@ class Plan:
     s_star: float | None = None
     b_star: float | None = None
     calibrated: bool = False
+    recommended_delay: int = 0
 
     def summary(self) -> str:
         sched, mesh = self.spec.schedule, self.spec.mesh
         tag = f" [autotuned s*={self.s_star:.2f} b*={self.b_star:.2f}]" if self.autotuned else ""
+        if sched.delay or self.recommended_delay:
+            tag += (
+                f" [delay D={sched.delay}, hides {self.cost.overlap_saved:.3g} s/epoch; "
+                f"model recommends D={self.recommended_delay}]"
+            )
         machine = self.spec.machine + ("+calibrated" if self.calibrated else "")
         return (
             f"{self.spec.name or self.spec.dataset}: mesh {mesh.p_r}×{mesh.p_c} "
@@ -133,7 +151,7 @@ def plan(spec: ExperimentSpec, calibration: Calibration | None = None) -> Plan:
     st = dataset_stats(spec.dataset)
     sched, mesh = spec.schedule, spec.mesh
     cfg = HybridConfig(p_r=mesh.p_r, p_c=mesh.p_c, s=sched.s, b=sched.b, tau=sched.tau)
-    cost = hybrid_epoch_cost(st.m, st.n, st.zbar, cfg, machine)
+    cost = hybrid_epoch_cost(st.m, st.n, st.zbar, cfg, machine, delay=sched.delay)
     regime = classify_regime(st.m, st.n, st.zbar, cfg, machine)
     return Plan(
         spec=spec,
@@ -144,4 +162,5 @@ def plan(spec: ExperimentSpec, calibration: Calibration | None = None) -> Plan:
         s_star=s_raw,
         b_star=b_raw,
         calibrated=calibration is not None,
+        recommended_delay=recommend_delay(st.m, st.n, st.zbar, cfg, machine),
     )

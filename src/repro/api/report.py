@@ -105,7 +105,14 @@ class RunReport:
             if self.ledger.seconds_per_round is not None:
                 comm += f", measured {self.ledger.seconds_per_round:.3g} s/round"
             if self.ledger.exposed_comm_s is not None:
-                comm += f", exposed {self.ledger.exposed_comm_s:.3g} s"
+                comm += (
+                    f", exposed {self.ledger.exposed_comm_s:.3g}"
+                    f"/{self.ledger.total_comm_s:.3g} s"
+                    f" (overlap-eff {self.ledger.overlap_efficiency:.2f}"
+                )
+                comm += (
+                    f", delay D={self.ledger.delay})" if self.ledger.delay else ")"
+                )
         return (
             f"{self.spec.name or self.spec.dataset} [{self.backend}]{obj} "
             f"s={sched.s} b={sched.b} τ={sched.tau} p_r×p_c="

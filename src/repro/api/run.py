@@ -121,3 +121,48 @@ def run(spec: ExperimentSpec, x0: np.ndarray | None = None) -> RunReport:
     from repro.api.session import Session
 
     return Session(spec, x0=x0).run()
+
+
+def run_decaying_tau(
+    spec: ExperimentSpec,
+    x0: np.ndarray | None = None,
+    stages: int = 3,
+    growth: int = 2,
+) -> list[RunReport]:
+    """The decaying-communication-frequency schedule of *Local SGD to
+    One-Shot Averaging* (arXiv:2106.04759), as a compensation knob for
+    delayed averaging: run ``stages`` consecutive segments of the spec,
+    multiplying τ by ``growth`` each stage — synchronize often while
+    the iterates move fast, then progressively less as they settle.
+    The spec's round budget is split across the stages (earlier stages
+    get the remainder) and the weights chain stage to stage, so the
+    list of per-stage reports is one continuous optimization; the last
+    report holds the final iterate. A ``delay`` on the schedule rides
+    along unchanged — growing τ only widens its legal range (D ≤ τ/s).
+    """
+    if stages < 1:
+        raise ValueError(f"stages={stages} must be ≥ 1")
+    if growth < 1:
+        raise ValueError(f"growth={growth} must be ≥ 1")
+    sched = spec.schedule
+    total = sched.rounds
+    per = [total // stages + (1 if i < total % stages else 0) for i in range(stages)]
+    if per[-1] < 1:
+        raise ValueError(
+            f"rounds={total} cannot cover {stages} stages with ≥ 1 round each"
+        )
+    base = spec.name or spec.dataset
+    reports: list[RunReport] = []
+    x = x0
+    for k, r in enumerate(per):
+        st = dataclasses.replace(
+            spec,
+            name=f"{base}/stage{k}-tau{sched.tau * growth**k}",
+            schedule=dataclasses.replace(
+                sched, tau=sched.tau * growth**k, rounds=r
+            ),
+        )
+        rep = run(st, x0=x)
+        reports.append(rep)
+        x = rep.x
+    return reports

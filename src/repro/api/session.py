@@ -44,7 +44,7 @@ from repro.api.plan import Plan, plan, replan_mesh
 from repro.api.report import RunReport, modeled_comm_words
 from repro.api.spec import ExperimentSpec, MeshSpec
 from repro.core import faults
-from repro.core.comm import MESH, TIMED, CommLedger, time_phase
+from repro.core.comm import MESH, TIMED, CommLedger, time_dispatch, time_phase
 from repro.core.engine import engine_comm_ledger, engine_loss, run_engine_chunk
 from repro.core.distributed import HybridDriver
 from repro.core.problem import problem_loss
@@ -252,11 +252,30 @@ class Session:
         else:
             probes = engine_phase_probes(self.bundle.team, self.spec.schedule)
         rec = obs_trace.active()
+        delay = self.spec.schedule.delay
         phases = {}
         for name, (fn, args, calls) in probes.items():
             per_call = time_phase(fn, *args)
             phases[name] = per_call * calls
-            if rec is not None:
+            if rec is None:
+                continue
+            if name == "allreduce_gv" and delay >= 1:
+                # delay-D split: the issue half is the async dispatch
+                # cost (measured — what the critical path pays while
+                # the reduction is in flight); the await half is the
+                # exposed remainder after D bundle-computes of overlap
+                # (the ledger's closed form, so trace and ledger agree).
+                issue_call = time_dispatch(fn, *args)
+                issue = min(issue_call, per_call) * calls
+                compute = phases.get("bundle_compute", 0.0)
+                await_s = max(phases[name] - issue - delay * compute, 0.0)
+                rec.add_span("allreduce_gv_issue", f"probe:{name}:issue",
+                             dur=issue, per_call_s=issue_call,
+                             calls_per_round=calls)
+                rec.add_span("allreduce_gv_await", f"probe:{name}:await",
+                             dur=await_s, delay=delay,
+                             calls_per_round=calls)
+            else:
                 rec.add_span(name, f"probe:{name}", dur=phases[name],
                              per_call_s=per_call, calls_per_round=calls)
         self.ledger.set_phase_seconds(phases)

@@ -337,6 +337,12 @@ class ExperimentSpec:
             "mesh": self.mesh.to_dict(),
             "stop": self.stop.to_dict(),
         }
+        # schedule.delay is emitted only when nonzero: a delay-0 spec
+        # serializes (and content-hashes) exactly as it did before the
+        # overlap knob existed, so pre-overlap checkpoints and sweep
+        # resume dirs stay valid.
+        if not self.schedule.delay:
+            d["schedule"].pop("delay", None)
         # objective/l2 are emitted only when non-default: a
         # default-logistic spec serializes (and content-hashes) exactly
         # as it did before the objective layer existed, so pre-existing

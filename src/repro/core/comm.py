@@ -68,6 +68,7 @@ __all__ = [
     "CommLedger",
     "CommRate",
     "capture_rates",
+    "time_dispatch",
     "time_phase",
 ]
 
@@ -128,12 +129,18 @@ class CommLedger:
                    (separate jitted probes over the round's real payload
                    shapes — the training step itself is never split, so
                    its compiled numerics stay untouched).
+    delay          the schedule's staleness D. D ≥ 1 pipelines the
+                   (G, v) Allreduce D bundles deep, so each collective
+                   has D bundle-computes to hide behind — the exposed
+                   (critical-path) comm time drops below the total
+                   while the counted volume is unchanged.
     """
 
     rates: tuple[CommRate, ...] = ()
     rounds: int = 0
     round_seconds: list[float] = dataclasses.field(default_factory=list)
     phase_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
+    delay: int = 0
 
     # ---- accumulation (driver-side) ----
 
@@ -153,6 +160,7 @@ class CommLedger:
             rounds=self.rounds,
             round_seconds=list(self.round_seconds),
             phase_seconds=dict(self.phase_seconds),
+            delay=self.delay,
         )
 
     # ---- counted totals (span-1 collectives move nothing) ----
@@ -204,17 +212,50 @@ class CommLedger:
         return statistics.median(self.round_seconds)
 
     @property
-    def exposed_comm_s(self) -> float | None:
-        """Communication time on the critical path over the committed
-        rounds: the per-round comm phases ("allreduce_gv" +
-        "param_avg") × rounds. Today nothing overlaps comm with
-        compute, so exposed equals total comm time; the overlap work
-        will shrink this while total stays — overlap efficiency is
-        1 − exposed/total. None until the phase probes have run."""
+    def total_comm_s(self) -> float | None:
+        """Total communication time over the committed rounds: the
+        per-round comm phases ("allreduce_gv" + "param_avg") × rounds —
+        what the run pays on the wire regardless of overlap. None until
+        the phase probes have run."""
         comm = [v for k, v in self.phase_seconds.items() if k != "bundle_compute"]
         if not comm:
             return None
         return float(sum(comm)) * self.rounds
+
+    @property
+    def exposed_comm_s(self) -> float | None:
+        """Communication time on the *critical path* over the committed
+        rounds. At delay 0 nothing overlaps, so exposed ≡ total. At
+        delay D ≥ 1 each per-bundle (G, v) Allreduce is consumed D
+        bundles after it is issued, so it has D bundle-computes to hide
+        behind: the exposed Gram-phase remainder per round is
+        max(allreduce_gv − D · bundle_compute, 0) (the positive part
+        commutes with the per-round scaling, since both phases count
+        the same τ/s calls). The parameter average stays synchronous at
+        the round boundary and is always exposed. None until the phase
+        probes have run."""
+        comm = {k: v for k, v in self.phase_seconds.items() if k != "bundle_compute"}
+        if not comm:
+            return None
+        gv = comm.pop("allreduce_gv", 0.0)
+        if self.delay:
+            compute = self.phase_seconds.get("bundle_compute", 0.0)
+            gv = max(gv - self.delay * compute, 0.0)
+        return float(gv + sum(comm.values())) * self.rounds
+
+    @property
+    def overlap_efficiency(self) -> float | None:
+        """exposed_comm_s / total_comm_s — the fraction of paid comm
+        time still on the critical path (1.0 = nothing hidden, the
+        delay-0 value; lower is better). None until the phase probes
+        have run."""
+        total = self.total_comm_s
+        exposed = self.exposed_comm_s
+        if total is None or exposed is None:
+            return None
+        if total <= 0.0:
+            return 1.0
+        return exposed / total
 
     # ---- serialization ----
 
@@ -226,9 +267,16 @@ class CommLedger:
             # derived, for human-readable reports (ignored on load)
             "counted": self.counted_words(),
         }
+        if self.delay:
+            # emitted only when nonzero: delay-0 ledgers serialize
+            # byte-identically to every pre-overlap release.
+            d["delay"] = self.delay
         if self.phase_seconds:
             d["phase_seconds"] = dict(self.phase_seconds)
-            d["exposed_comm_s"] = self.exposed_comm_s  # derived
+            # derived trio, for human-readable reports (ignored on load)
+            d["exposed_comm_s"] = self.exposed_comm_s
+            d["total_comm_s"] = self.total_comm_s
+            d["overlap_efficiency"] = self.overlap_efficiency
         return d
 
     @classmethod
@@ -240,6 +288,7 @@ class CommLedger:
             phase_seconds={
                 k: float(v) for k, v in d.get("phase_seconds", {}).items()
             },
+            delay=int(d.get("delay", 0)),
         )
 
 
@@ -337,6 +386,34 @@ class Collectives:
             return tree
         return jax.tree_util.tree_map(lambda t: jax.lax.psum(t, "cols"), tree)
 
+    # ---- the async-dispatch-shaped split of the Gram Allreduce ----
+    #
+    # JAX collectives are dispatched asynchronously: the Python call
+    # returns a future-backed array and the host only blocks when a
+    # value is needed. The delay-D pipeline makes that explicit at the
+    # call-site level — ``issue_allreduce_cols`` at bundle k starts the
+    # reduction, ``await_allreduce`` at bundle k+D marks where its value
+    # is first consumed. Under XLA the issue *is* the psum (recorded
+    # once, same payload accounting as the fused call) and the await is
+    # the identity: the D bundle-computes the scheduler runs in between
+    # are what actually hides the transfer.
+
+    def issue_allreduce_cols(self, tree, *, calls_per_round: int = 1,
+                             words_per_call: int | None = None):
+        """Start the per-bundle (G, v) Allreduce for a delayed schedule.
+        Same reduction, recording, and payload conventions as
+        ``allreduce_cols`` — the split exists so traces and ledgers can
+        attribute the in-flight window."""
+        return self.allreduce_cols(
+            tree, calls_per_round=calls_per_round, words_per_call=words_per_call
+        )
+
+    def await_allreduce(self, tree):
+        """Consume a previously issued Allreduce. Identity on every
+        kind and never recorded — the payload was counted at issue
+        time; this marks the critical-path join point."""
+        return tree
+
     # ---- the column Allreduce: average weights across row teams ----
 
     def allmean_rows(self, x, *, calls_per_round: int = 1,
@@ -397,4 +474,25 @@ def time_phase(fn, *args, repeats: int = 5) -> float:
         t0 = _time.perf_counter()
         jax.block_until_ready(fn(*args))
         walls.append(_time.perf_counter() - t0)
+    return statistics.median(walls)
+
+
+def time_dispatch(fn, *args, repeats: int = 5) -> float:
+    """Median wall seconds to *dispatch* one call of a compiled probe —
+    the host returns as soon as the async runtime has enqueued the work,
+    without blocking on the value. This is what an issued collective
+    costs the critical path while its transfer is in flight; the
+    complement ``time_phase − time_dispatch`` is the hideable window.
+    Each repeat still drains the device afterwards (outside the timed
+    region) so queued work from one repeat never backs up into the
+    next."""
+    import time as _time
+
+    jax.block_until_ready(fn(*args))  # warmup / compile
+    walls = []
+    for _ in range(int(repeats)):
+        t0 = _time.perf_counter()
+        out = fn(*args)
+        walls.append(_time.perf_counter() - t0)
+        jax.block_until_ready(out)
     return statistics.median(walls)

@@ -44,7 +44,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import comm as comm_plane
 from repro.core.comm import MESH, Collectives, CommLedger
-from repro.core.engine import ParallelSGDSchedule, bundle_gram_v, inner_corrections
+from repro.core.engine import (
+    ParallelSGDSchedule,
+    bundle_gram_v,
+    check_delay,
+    delayed_bundle_scan,
+    inner_corrections,
+)
 from repro.core.objective import LOGISTIC, Objective, get_objective
 from repro.core.problem import Problem, problem_loss
 from repro.sparse.csr import CSRMatrix
@@ -214,6 +220,27 @@ def _build_round_fn(prob: Hybrid2DProblem, sched: ParallelSGDSchedule,
         val_blk = val_blk[0, 0]
         m_local = idx_blk.shape[0]
 
+        if sched.delay:
+            # Delay-D pipeline: the per-bundle psum is *issued* at
+            # bundle t and first *consumed* at bundle t+D, so XLA's
+            # async dispatch has D bundle-computes of independent work
+            # to run while the reduction is in flight. The staging
+            # logic is the engine's shared scan — both backends execute
+            # the same pipelined math by construction.
+            def slice_bundle(t):
+                k0 = round_idx * bundles + t
+                start = (k0 * sb) % m_local
+                bi = jax.lax.dynamic_slice_in_dim(idx_blk, start, sb, axis=0)
+                bv = jax.lax.dynamic_slice_in_dim(val_blk, start, sb, axis=0)
+                return bi, bv
+
+            x_loc = delayed_bundle_scan(
+                x_loc, slice_bundle=slice_bundle, bundles=bundles, n=n_loc,
+                sched=sched, eta=eta_, objective=objective, comm=comm,
+                gram=gram_,
+            )
+            return comm.allmean_rows(x_loc)
+
         def bundle(x_loc, t):
             k0 = round_idx * bundles + t
             start = (k0 * sb) % m_local
@@ -262,7 +289,7 @@ def hybrid_comm_ledger(prob: Hybrid2DProblem, sched: ParallelSGDSchedule,
         jax.ShapeDtypeStruct((), jnp.int32),
         spans={"cols": prob.p_c, "rows": prob.p_r},
     )
-    return CommLedger(rates=rates)
+    return CommLedger(rates=rates, delay=sched.delay)
 
 
 def make_hybrid_step(
@@ -318,6 +345,7 @@ def make_hybrid_step(
         )
     if sched.eta <= 0:
         raise ValueError(f"eta={sched.eta} must be > 0 to run the solver")
+    check_delay(sched)
     if not comm.on_mesh:
         raise ValueError(
             f"make_hybrid_step needs mesh collectives (mesh/timed), got {comm.kind!r}"

@@ -85,6 +85,17 @@ class ParallelSGDSchedule:
     p_c     column shards. Communication-only: it never changes the
             numerics (kept here so one object describes the full mesh;
             repro.core.distributed consumes it).
+    delay   DaSGD-style staleness D (0 = synchronous, the default and
+            bitwise-identical to the pre-delay engine). With D ≥ 1 the
+            (G, v) collective of bundle t is *issued* at t but
+            *consumed* at bundle t+D — the in-flight Allreduce rides a
+            D-deep staging buffer and overlaps the next D bundles'
+            Gram compute; the last D bundles drain before the round's
+            parameter average, so round boundaries (checkpoints,
+            chunking, averaging cadence) are unchanged. A numerical
+            knob: D ≥ 1 changes the iterates (each bundle's gradient
+            is D bundles stale), not the communication volume. Must
+            satisfy D ≤ τ/s (the per-round bundle count).
     """
 
     p_r: int = 1
@@ -98,6 +109,7 @@ class ParallelSGDSchedule:
     bk: int = 512
     interpret: bool = True
     p_c: int = 1
+    delay: int = 0
 
     def __post_init__(self):
         # NOTE: s | τ is required by the *solver* (checked in
@@ -112,6 +124,8 @@ class ParallelSGDSchedule:
                 raise ValueError(f"{knob}={v!r} must be a positive integer")
         if self.loss_every < 0:
             raise ValueError(f"loss_every={self.loss_every} must be ≥ 0")
+        if self.delay < 0:
+            raise ValueError(f"delay={self.delay} must be ≥ 0")
         if self.eta < 0:
             raise ValueError(f"eta={self.eta} must be ≥ 0")
         if self.loss_every and self.rounds % self.loss_every:
@@ -236,6 +250,102 @@ def inner_corrections(
     return u
 
 
+def delayed_bundle_scan(x, *, slice_bundle, bundles: int, n: int,
+                        sched: ParallelSGDSchedule, eta,
+                        objective: Objective = LOGISTIC,
+                        comm=COUNTING, gram: str | None = None):
+    """The delay-D software pipeline over one round's τ/s bundles —
+    the shared round-body core of both backends when ``sched.delay ≥ 1``
+    (DaSGD, arXiv:2006.00441).
+
+    At step t the body computes bundle t's local (G, v) at the current
+    (D-bundle-stale) iterate and *issues* its row-team Allreduce
+    (``comm.issue_allreduce_cols``); the staged result rides a D-deep
+    FIFO in the scan carry and is *consumed* (``comm.await_allreduce``
+    → corrections → weight update) at step t+D — so on a mesh the
+    in-flight psum has the next D bundles' Gram compute to hide behind
+    (the data dependency lands D iterations later, which is the window
+    XLA's scheduler overlaps). After the main scan the last D staged
+    entries drain synchronously, *before* the caller's parameter
+    average: every round boundary carries only ``x``, so chunking,
+    checkpointing, and the τ-cadence averaging are exactly where the
+    synchronous schedule puts them.
+
+    Warmup steps (t < D) consume the zero-initialized buffer and are
+    masked out with ``jnp.where`` rather than ``lax.cond`` — no
+    collectives inside conditionals (shard_map-safe), deterministic
+    wasted work on D dummy entries per round. Exactly ``bundles``
+    updates (and, under L2, exactly ``bundles`` decay folds) are
+    applied per round, same as the synchronous path.
+
+    ``slice_bundle(t) -> (idx, val)`` supplies the (s·b, width) ELL
+    bundle; ``comm`` is COUNTING on the simulated engine (identity —
+    the staged value is already globally reduced) and MESH/TIMED under
+    shard_map. ``gram`` overrides the schedule's bundle backend (the
+    shard_map path runs "pallas" as "blocked")."""
+    s, b = sched.s, sched.b
+    sb = s * b
+    d = sched.delay
+    lam = objective.l2
+    gram_ = sched.gram if gram is None else gram
+
+    def compute_issue(x, t):
+        idx, val = slice_bundle(t)
+        g, v = bundle_gram_v(idx, val, x, n, gram=gram_, bk=sched.bk,
+                             interpret=sched.interpret)
+        # issued here, consumed D bundles later (the s = 1 corner
+        # stages the full (G, v) too — its distributed twin psums the
+        # dense block either way, so counted payloads stay pinned).
+        g, v = comm.issue_allreduce_cols((g, v), calls_per_round=bundles)
+        return idx, val, g, v
+
+    def consume_apply(x, entry, live):
+        idx, val, g, v = entry
+        g, v = comm.await_allreduce((g, v))
+        u = inner_corrections(g, v, s, b, eta, objective)
+        blk = EllBlock(indices=idx, values=val, n=n)
+        upd = (eta / b) * ell_rmatvec(blk, u).astype(x.dtype)
+        if lam == 0.0:
+            return jnp.where(live, x + upd, x)
+        rho_s = jnp.asarray(1.0 - eta * lam, x.dtype) ** s
+        return jnp.where(live, rho_s * x + upd, x)
+
+    # the D-deep staging FIFO: buf[0] is the oldest in-flight bundle.
+    # Shapes/dtypes are written out by hand (an eval_shape through
+    # compute_issue would double-record the collective under the
+    # ledger's capture recorder).
+    idx0, val0 = slice_bundle(0)
+    width = idx0.shape[-1]
+    gv_dtype = jnp.result_type(val0.dtype, x.dtype)
+    buf = (
+        jnp.zeros((d, sb, width), idx0.dtype),
+        jnp.zeros((d, sb, width), val0.dtype),
+        jnp.zeros((d, sb, sb), gv_dtype),
+        jnp.zeros((d, sb), gv_dtype),
+    )
+
+    def body(carry, t):
+        x, buf = carry
+        new = compute_issue(x, t)
+        oldest = jax.tree_util.tree_map(lambda a: a[0], buf)
+        buf = jax.tree_util.tree_map(
+            lambda a, e: jnp.concatenate([a[1:], e[None]], axis=0), buf, new
+        )
+        x = consume_apply(x, oldest, t >= d)
+        return (x, buf), None
+
+    (x, buf), _ = jax.lax.scan(body, (x, buf), jnp.arange(bundles))
+
+    def drain(x, j):
+        entry = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, j, keepdims=False), buf
+        )
+        return consume_apply(x, entry, jnp.bool_(True)), None
+
+    x, _ = jax.lax.scan(drain, x, jnp.arange(d))
+    return x
+
+
 def _team_inner_iterations(indices, values, n: int, x, round_idx, eta,
                            sched: ParallelSGDSchedule,
                            objective: Objective = LOGISTIC):
@@ -249,6 +359,19 @@ def _team_inner_iterations(indices, values, n: int, x, round_idx, eta,
     s, b = sched.s, sched.b
     sb = s * b
     lam = objective.l2
+
+    if sched.delay:
+        def slice_bundle(t):
+            k0 = round_idx * bundles + t
+            start = (k0 * sb) % m_local
+            idx = jax.lax.dynamic_slice_in_dim(indices, start, sb, axis=0)
+            val = jax.lax.dynamic_slice_in_dim(values, start, sb, axis=0)
+            return idx, val
+
+        return delayed_bundle_scan(
+            x, slice_bundle=slice_bundle, bundles=bundles, n=n, sched=sched,
+            eta=eta, objective=objective, comm=COUNTING,
+        )
 
     def bundle_step(x, t):
         k0 = round_idx * bundles + t
@@ -300,9 +423,12 @@ def _one_round(tp, x, r, eta, sched):
         idx, val = args
         return _team_inner_iterations(idx, val, tp.n, x, r, eta, sched, tp.objective)
 
-    if sched.s == 1:
+    if sched.s == 1 and not sched.delay:
         # FedAvg/MB-SGD corner: per-team working set is one (b, w)
         # batch — run all teams batched (the old run_fedavg vmap).
+        # The delayed path materializes the full (G, v) even at s = 1
+        # (its distributed twin psums the dense block), so it takes the
+        # sequential branch like every Gram-bearing schedule.
         xs = jax.vmap(team)((tp.indices, tp.values))
     else:
         # lax.map (not vmap): teams run sequentially on one device,
@@ -347,10 +473,25 @@ def _run_engine(tp, x0, eta, sched):
 # bitwise.
 
 
+def check_delay(sched: ParallelSGDSchedule) -> None:
+    """Solver-entry validation of the delay knob: the staging buffer
+    drains inside the round, so D cannot exceed the per-round bundle
+    count (entries past it would never be issued)."""
+    bundles = sched.tau // sched.s
+    if sched.delay > bundles:
+        raise ValueError(
+            f"delay={sched.delay} must be ≤ τ/s={bundles} (the per-round "
+            f"bundle count): the staging buffer drains before each round's "
+            f"parameter average"
+        )
+
+
 def _normalize_for_chunk(sched: ParallelSGDSchedule) -> ParallelSGDSchedule:
     """Zero every knob the per-round math does not read (η is traced;
     rounds/loss_every belong to the driver; p_c is communication-only)
-    so the jit cache keys only on what changes the computation."""
+    so the jit cache keys only on what changes the computation.
+    ``delay`` is *kept*: D ≥ 1 pipelines the bundle loop and changes
+    the iterates, so it must key the compiled round body."""
     return dataclasses.replace(sched, eta=0.0, rounds=1, loss_every=0, p_c=1)
 
 
@@ -389,6 +530,7 @@ def run_engine_chunk(
     scan the same ``_one_round`` body over the same round indices."""
     if sched.eta <= 0:
         raise ValueError(f"eta={sched.eta} must be > 0 to run the solver")
+    check_delay(sched)
     eta = jnp.asarray(sched.eta, x.dtype)
     return _engine_chunk(
         tp, x, jnp.int32(round_offset), eta, _normalize_for_chunk(sched), int(k)
@@ -417,6 +559,7 @@ def run_parallel_sgd(
         raise ValueError(
             f"tau={sched.tau} must be divisible by s={sched.s} (paper requires s ≤ τ)"
         )
+    check_delay(sched)
     if tp.p != sched.p_r:
         raise ValueError(f"TeamProblem has p={tp.p} teams but schedule p_r={sched.p_r}")
     if tp.rows_local % (sched.s * sched.b):
@@ -463,7 +606,7 @@ def engine_comm_ledger(
         jax.ShapeDtypeStruct((), jnp.float32),
         spans={"cols": sched.p_c, "rows": sched.p_r},
     )
-    return CommLedger(rates=rates)
+    return CommLedger(rates=rates, delay=sched.delay)
 
 
 def engine_phase_probes(tp: TeamProblem, sched: ParallelSGDSchedule) -> dict:

@@ -39,16 +39,28 @@ class HybridConfig:
 
 @dataclasses.dataclass(frozen=True)
 class CostBreakdown:
-    """Per-epoch seconds, decomposed as in Eq. (4)."""
+    """Per-epoch seconds, decomposed as in Eq. (4).
+
+    ``overlap_saved`` is the Gram-phase communication hidden behind
+    compute by a delay-D schedule (0 for the synchronous D=0 form):
+    per bundle the critical path pays max(comm, compute) instead of
+    their sum, so the epoch saves min(gram_comm, D · compute). The
+    decomposed terms keep their synchronous Eq. (4) values — ``total``
+    subtracts the overlap, so dominant-term analysis still sees what
+    the run pays on the wire."""
 
     compute: float
     latency: float
     gram_bw: float
     sync_bw: float
+    overlap_saved: float = 0.0
 
     @property
     def total(self) -> float:
-        return self.compute + self.latency + self.gram_bw + self.sync_bw
+        return (
+            self.compute + self.latency + self.gram_bw + self.sync_bw
+            - self.overlap_saved
+        )
 
     @property
     def dominant(self) -> str:
@@ -74,10 +86,18 @@ def hybrid_epoch_cost(
     gamma: float | None = None,
     beta_row: float | None = None,
     beta_col: float | None = None,
+    delay: int = 0,
 ) -> CostBreakdown:
     """Eq. (4). γ defaults to the cache-aware value at the per-rank
     weight-slab working set (n·w/p_c); β defaults to the rank-aware
-    values for each Allreduce's span."""
+    values for each Allreduce's span.
+
+    ``delay`` prices the DaSGD overlap pipeline: at D ≥ 1 each per-
+    bundle (G, v) Allreduce (the row-team latency + Gram-bandwidth
+    phases) has D bundle-computes to hide behind, so the critical path
+    pays max(gram_comm, D·compute) in place of gram_comm + D·compute —
+    equivalently ``overlap_saved = min(gram_comm, D·compute)`` per
+    epoch. The synchronous column sync is never overlapped."""
     w = machine.word_bytes
     if gamma is None:
         gamma = machine.gamma_flop(n * w / cfg.p_c)
@@ -90,10 +110,38 @@ def hybrid_epoch_cost(
     compute = (m / p) * (6 * zbar + 2 * s * b) * gamma
     alpha_row = machine.alpha(p_c)
     alpha_col = machine.alpha(p_r)
-    latency = m * 2 * (alpha_row * tau * _log2(p_c) + alpha_col * _log2(p_r)) / (s * b * tau)
+    lat_row = m * 2 * alpha_row * _log2(p_c) / (s * b)
+    lat_col = m * 2 * alpha_col * _log2(p_r) / (s * b * tau)
+    latency = lat_row + lat_col
     gram_bw = m * ((s - 1) * b / 2) * w * beta_row
     sync_bw = m * n * w * beta_col / (s * b * tau * p_c)
-    return CostBreakdown(compute=compute, latency=latency, gram_bw=gram_bw, sync_bw=sync_bw)
+    overlap_saved = 0.0
+    if delay >= 1 and p_c > 1:
+        overlap_saved = min(lat_row + gram_bw, delay * compute)
+    return CostBreakdown(
+        compute=compute, latency=latency, gram_bw=gram_bw, sync_bw=sync_bw,
+        overlap_saved=overlap_saved,
+    )
+
+
+def recommend_delay(
+    m: int, n: int, zbar: float, cfg: HybridConfig, machine: Machine
+) -> int:
+    """The smallest staleness D whose overlap window covers the Gram-
+    phase communication: ⌈gram_comm / compute⌉ per bundle (both scale
+    with the same m/(sbτ) call count, so the epoch ratio is the bundle
+    ratio), clamped to the schedule's legal range [1, τ/s]. Returns 0
+    when p_c = 1 — no row-team Allreduce exists, so staleness buys
+    nothing and D=0 keeps the exact synchronous iterates."""
+    if cfg.p_c <= 1:
+        return 0
+    cb = hybrid_epoch_cost(m, n, zbar, cfg, machine)
+    lat_row = m * 2 * machine.alpha(cfg.p_c) * _log2(cfg.p_c) / (cfg.s * cfg.b)
+    gram_comm = lat_row + cb.gram_bw
+    if cb.compute <= 0.0:
+        return 1
+    d = math.ceil(gram_comm / cb.compute)
+    return max(1, min(d, cfg.tau // cfg.s))
 
 
 def sstep_epoch_cost(m: int, n: int, zbar: float, s: int, b: int, p: int, machine: Machine) -> CostBreakdown:

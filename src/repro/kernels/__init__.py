@@ -1,39 +1,25 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-  bsr_matmul — block-sparse matmul, scalar-prefetched block indices
-               (the MKL-CSR SpMV, rethought for the MXU)
   ell_gram   — the engine's bundle primitive: fused tril(YYᵀ) + Y·x
                straight from ELL rows, scatter-free (the
                mkl_sparse_syrkd hot spot of Algorithm 3)
-  gram       — the same syrk for an already-dense Y panel
   sstep_inner — the s-step correction loop fused into one launch
                (G, v, u stay VMEM-resident across all s steps)
 
-ops.py: jit'd wrappers (SparseLinearOp bundles A and BSR(Aᵀ));
 ref.py: pure-jnp oracles — including the retired (sb × n) densify
-bundle path, kept only as the parity oracle.
+bundle path, kept only as the parity oracle. The pre-engine dense-panel
+Gram (``gram.py``), the BSR matmul (``bsr_matmul.py``), and their
+``ops.py`` wrappers were dead paths off the live bundle pipeline and
+have been removed; ``repro.sparse.bsr`` keeps the BSR *layout* (and its
+jnp reference matvec) for the format tests.
 interpret=True on CPU, =False on real TPU.
 """
 
 from repro.kernels.ell_gram import ell_gram_and_v, ell_gram_and_v_blocked
-from repro.kernels.ops import (
-    SparseLinearOp,
-    sparse_linear_op,
-    spmm,
-    spmv,
-    sstep_gram,
-    sstep_gram_and_v,
-)
 from repro.kernels.sstep_inner import sstep_inner
 
 __all__ = [
-    "SparseLinearOp",
     "ell_gram_and_v",
     "ell_gram_and_v_blocked",
-    "sparse_linear_op",
-    "spmm",
-    "spmv",
-    "sstep_gram",
-    "sstep_gram_and_v",
     "sstep_inner",
 ]

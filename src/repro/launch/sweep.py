@@ -125,6 +125,12 @@ def main(argv: list[str] | None = None) -> None:
                          "(repro.core.objective registry)")
     ap.add_argument("--l2", type=float, default=None, metavar="LAMBDA",
                     help="override every loaded spec's L2 coefficient")
+    ap.add_argument("--delay", type=int, default=None, metavar="D",
+                    help="override every loaded spec's schedule.delay: the "
+                         "DaSGD staleness D — (G, v) Allreduces issued at "
+                         "bundle k are consumed at bundle k+D, overlapping "
+                         "the collective with D bundles of Gram compute "
+                         "(0 = synchronous; changes the iterates at D ≥ 1)")
     ap.add_argument("--timed", action="store_true",
                     help="run every spec with the timed collectives "
                          "(per-round wall into the report's CommLedger — "
@@ -162,6 +168,15 @@ def main(argv: list[str] | None = None) -> None:
         # also moves each spec's content hash, so --resume dirs never
         # mix objectives (or timed with untimed runs).
         specs = [dataclasses.replace(s, **override) for s in specs]
+    if args.delay is not None:
+        # schedule-level override (same hash-moving property: a D ≥ 1
+        # run never collides with a synchronous resume dir).
+        specs = [
+            dataclasses.replace(
+                s, schedule=dataclasses.replace(s.schedule, delay=args.delay)
+            )
+            for s in specs
+        ]
 
     calibration = None
     if args.calibrate is not None:

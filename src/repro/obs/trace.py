@@ -29,7 +29,11 @@ category is a programming error and raises immediately. The mapping to
 the paper: ``bundle_compute`` is Eq. 4's γ (compute) term,
 ``allreduce_gv`` the per-bundle (G, v) Allreduce (α/β over p_c),
 ``param_avg`` the per-τ weight averaging (α/β over p_r) — the three
-phases §6.5 calibrates. ``round``/``compile`` wrap the session chunk
+phases §6.5 calibrates. Under a delay-D schedule ``allreduce_gv``
+splits into ``allreduce_gv_issue`` (the host-side dispatch cost that
+stays on the critical path) and ``allreduce_gv_await`` (the exposed
+remainder after D bundle-computes of overlap) — Perfetto shows the
+bubble closing as D grows. ``round``/``compile`` wrap the session chunk
 loop; ``ckpt_save``/``ckpt_verify``/``swap`` the durability plane;
 ``ingest``/``predict_batch`` the serve plane.
 """
@@ -55,6 +59,8 @@ SPAN_CATEGORIES = (
     "round",
     "bundle_compute",
     "allreduce_gv",
+    "allreduce_gv_issue",
+    "allreduce_gv_await",
     "param_avg",
     "ckpt_save",
     "ckpt_verify",

@@ -239,6 +239,46 @@ def test_comm_ledger_backend_parity(mesh_shape):
     assert "OK" in out
 
 
+@pytest.mark.parametrize("delay", [1, 2])
+def test_delayed_pipeline_backend_parity(delay):
+    """The DaSGD delay-D pipeline on a real 2×4 mesh: both executors run
+    the shared ``delayed_bundle_scan`` (issue at bundle t, consume at
+    t+D, drain before the round's parameter average), so the stale
+    iterates must agree across backends — and must differ from the
+    synchronous D=0 trajectory (the knob is real)."""
+    out = run_in_subprocess(
+        f"""
+        import dataclasses
+        import numpy as np
+        from repro.api import ExperimentSpec, MeshSpec, run
+        from repro.core import ParallelSGDSchedule
+
+        sched = ParallelSGDSchedule.hybrid(2, 2, 4, 0.05, 8, rounds=3,
+                                           loss_every=1, delay={delay})
+        spec = ExperimentSpec(
+            dataset="rcv1-sm",
+            schedule=sched,
+            mesh=MeshSpec(p_r=2, p_c=4, backend="simulated"),
+            name="delay-parity",
+        )
+        r_sim = run(spec)
+        r_dist = run(dataclasses.replace(
+            spec, mesh=MeshSpec(p_r=2, p_c=4, backend="shard_map")))
+        dx = float(np.abs(r_sim.x - r_dist.x).max())
+        dl = float(np.abs(r_sim.losses - r_dist.losses).max())
+        assert dx < 1e-5, dx
+        assert dl < 1e-5, dl
+        r_sync = run(dataclasses.replace(
+            spec, schedule=dataclasses.replace(sched, delay=0)))
+        assert not np.array_equal(r_sync.x, r_dist.x)
+        assert r_sim.ledger.delay == r_dist.ledger.delay == {delay}
+        assert r_sim.ledger.counted_words() == r_dist.ledger.counted_words()
+        print("OK", dx, dl)
+        """
+    )
+    assert "OK" in out
+
+
 def test_timed_mesh_run_measures_and_calibrates():
     """comm_timing on a real 2×2 mesh: per-round wall seconds land in
     the ledger, the iterates are unchanged, and calibrate() fits from

@@ -1,5 +1,8 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype
-sweeps per the kernel-validation contract."""
+sweeps per the kernel-validation contract. Covers the two live kernels
+— the ELL-Gram bundle primitive and the fused s-step correction loop —
+against the ``repro.kernels.ref`` oracles (the retired dense-panel and
+BSR kernels are gone; their oracles remain the parity reference)."""
 
 import numpy as np
 import pytest
@@ -7,12 +10,8 @@ from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.kernels.bsr_matmul import bsr_matmat, bsr_matvec
-from repro.kernels.gram import gram_and_v, gram_tril
-from repro.kernels.ops import sparse_linear_op, sstep_gram, sstep_gram_and_v
 from repro.kernels import ref
-from repro.sparse.bsr import bsr_from_csr
-from repro.sparse.csr import csr_from_dense
+from repro.kernels.ell_gram import ell_gram_and_v, ell_gram_and_v_blocked
 from repro.sparse.synthetic import make_skewed_csr
 
 
@@ -22,113 +21,51 @@ def tol(dtype):
 
 @settings(max_examples=20, deadline=None)
 @given(
-    m=st.integers(4, 120),
-    n=st.integers(8, 500),
-    zbar=st.integers(2, 30),
-    alpha=st.floats(0.0, 1.2),
-    k=st.sampled_from([1, 4, 8]),
-    seed=st.integers(0, 999),
-)
-def test_bsr_matmat_sweep(m, n, zbar, alpha, k, seed):
-    a = make_skewed_csr(m, n, min(zbar, n), alpha, seed=seed)
-    bsr = bsr_from_csr(a, bm=8, bn=128)
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.standard_normal((bsr.shape[1], k)).astype(np.float32))
-    got = bsr_matmat(bsr.tiles, bsr.block_cols, x)
-    want = ref.bsr_matmat_ref(bsr.tiles, bsr.block_cols, x)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
-
-
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("bm,bn", [(8, 128), (16, 128), (8, 256)])
-def test_bsr_matvec_shapes_dtypes(dtype, bm, bn):
-    a = make_skewed_csr(96, 640, 20, 0.9, seed=4)
-    bsr = bsr_from_csr(a, bm=bm, bn=bn, dtype=dtype)
-    rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal(bsr.shape[1]), dtype=dtype)
-    got = bsr_matvec(bsr.tiles, bsr.block_cols, x)
-    want = ref.bsr_matvec_ref(bsr.tiles, bsr.block_cols, x)
-    np.testing.assert_allclose(
-        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
-    )
-
-
-@settings(max_examples=20, deadline=None)
-@given(
-    sb=st.sampled_from([8, 32, 64, 128]),
+    sb=st.sampled_from([8, 32, 64]),
     n=st.integers(10, 2000),
+    width=st.integers(1, 24),
     bk=st.sampled_from([128, 256, 512]),
     seed=st.integers(0, 999),
 )
-def test_gram_sweep(sb, n, bk, seed):
+def test_ell_gram_sweep(sb, n, width, bk, seed):
+    """Both live bundle implementations == the densify oracle over
+    random ELL bundles (duplicate column ids included)."""
     rng = np.random.default_rng(seed)
-    y = jnp.asarray(rng.standard_normal((sb, n)).astype(np.float32))
-    got = gram_tril(y, bk=bk)
-    want = ref.gram_tril_ref(y)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+    width = min(width, n)
+    idx = jnp.asarray(rng.integers(0, n, size=(sb, width)).astype(np.int32))
+    val = jnp.asarray(rng.standard_normal((sb, width)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    g_ref, v_ref = ref.ell_gram_and_v_ref(idx, val, x, n)
+    for impl in (
+        lambda: ell_gram_and_v(idx, val, x, n=n, bk=bk),
+        lambda: ell_gram_and_v_blocked(idx, val, x, n=n, bk=bk),
+    ):
+        g, v = impl()
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), rtol=1e-3, atol=1e-3)
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_gram_and_v_fused(dtype):
-    rng = np.random.default_rng(1)
-    y = jnp.asarray(rng.standard_normal((64, 900)), dtype=dtype)
-    x = jnp.asarray(rng.standard_normal(900), dtype=dtype)
-    g, v = gram_and_v(y, x, bk=256)
-    gr, vr = ref.gram_and_v_ref(y, x)
-    np.testing.assert_allclose(np.asarray(g, np.float32), np.asarray(gr, np.float32), **tol(dtype))
-    np.testing.assert_allclose(np.asarray(v, np.float32), np.asarray(vr, np.float32), **tol(dtype))
-
-
-def test_gram_is_strictly_lower():
+def test_ell_gram_is_strictly_lower():
     rng = np.random.default_rng(2)
-    y = jnp.asarray(rng.standard_normal((32, 300)).astype(np.float32))
-    g = np.asarray(gram_tril(y, bk=128))
-    assert np.all(np.triu(g) == 0.0)
-
-
-def test_sparse_linear_op_against_dense(skewed_csr):
-    op = sparse_linear_op(skewed_csr)
-    dense = skewed_csr.to_dense()
-    rng = np.random.default_rng(3)
-    x = rng.standard_normal(skewed_csr.n).astype(np.float32)
-    u = rng.standard_normal(skewed_csr.m).astype(np.float32)
-    np.testing.assert_allclose(np.asarray(op.matvec(jnp.asarray(x))), dense @ x, rtol=1e-3, atol=1e-3)
-    np.testing.assert_allclose(np.asarray(op.rmatvec(jnp.asarray(u))), dense.T @ u, rtol=1e-3, atol=1e-3)
-
-
-def test_kernel_backed_sgd_step_matches_ell():
-    """End-to-end: one SGD gradient via BSR kernels == ELL path."""
-    from repro.core.problem import make_problem, sigmoid_residual
-    from repro.sparse.ell import ell_matvec, ell_rmatvec
-    from repro.core.sgd import batch_rows
-
-    rng = np.random.default_rng(5)
-    a = make_skewed_csr(128, 300, 10, 0.8, seed=6)
-    y = np.where(rng.random(128) < 0.5, 1.0, -1.0)
-    prob = make_problem(a, y, row_multiple=128)
+    idx = jnp.asarray(rng.integers(0, 300, size=(32, 9)).astype(np.int32))
+    val = jnp.asarray(rng.standard_normal((32, 9)).astype(np.float32))
     x = jnp.asarray(rng.standard_normal(300).astype(np.float32))
-
-    batch = batch_rows(prob.ya, jnp.int32(0), 32)
-    u_ell = sigmoid_residual(ell_matvec(batch, x))
-    g_ell = ell_rmatvec(batch, u_ell)
-
-    ya = a.scale_rows(y)
-    op = sparse_linear_op(ya.row_block(0, 32))
-    u_bsr = sigmoid_residual(op.matvec(x))
-    g_bsr = op.rmatvec(u_bsr)
-    np.testing.assert_allclose(np.asarray(u_bsr), np.asarray(u_ell[:32]), rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(np.asarray(g_bsr), np.asarray(g_ell), rtol=1e-3, atol=1e-3)
+    g, _ = ell_gram_and_v(idx, val, x, n=300, bk=128)
+    assert np.all(np.triu(np.asarray(g)) == 0.0)
 
 
-def test_sstep_bundle_gram_matches_core():
-    """The Pallas gram on a densified bundle == the core solver's Gram."""
-    rng = np.random.default_rng(7)
+def test_densify_oracle_matches_csr():
+    """The oracle's densify == the CSR dense expansion (the retired
+    scatter path, kept as the reference the live kernels verify
+    against)."""
     a = make_skewed_csr(64, 257, 9, 0.5, seed=8)
-    dense = jnp.asarray(a.to_dense()[:32].astype(np.float32))
-    x = jnp.asarray(rng.standard_normal(257).astype(np.float32))
-    g, v = sstep_gram_and_v(dense, x, bk=128)
-    np.testing.assert_allclose(np.asarray(g), np.asarray(jnp.tril(dense @ dense.T, k=-1)), rtol=1e-3, atol=1e-3)
-    np.testing.assert_allclose(np.asarray(v), np.asarray(dense @ x), rtol=1e-3, atol=1e-3)
+    from repro.core.problem import make_problem
+
+    prob = make_problem(a, np.ones(64), row_multiple=64)
+    dense = np.asarray(
+        ref.densify_bundle_ref(prob.ya.indices, prob.ya.values, 257)
+    )
+    np.testing.assert_allclose(dense[:64], a.to_dense().astype(np.float32), rtol=1e-6, atol=1e-6)
 
 
 @settings(max_examples=15, deadline=None)
@@ -155,13 +92,12 @@ def test_sstep_inner_kernel_sweep(s, b, eta, seed):
 
 def test_sstep_inner_kernel_in_solver_context():
     """End-to-end: kernel-computed u reproduces one s-step bundle's
-    update inside the real solver pipeline."""
+    update inside the real solver pipeline (Gram/v from the live ELL
+    kernel)."""
     from repro.core.problem import make_problem
     from repro.core.sgd import batch_rows, run_sgd
-    from repro.kernels.ops import sstep_gram_and_v
     from repro.kernels.sstep_inner import sstep_inner
     from repro.sparse.ell import ell_rmatvec
-    from repro.sparse.synthetic import make_skewed_csr
 
     rng = np.random.default_rng(3)
     a = make_skewed_csr(128, 300, 10, 0.8, seed=9)
@@ -171,11 +107,7 @@ def test_sstep_inner_kernel_in_solver_context():
     x = jnp.asarray(rng.standard_normal(300).astype(np.float32))
 
     bundle = batch_rows(prob.ya, jnp.int32(0), s * b)
-    dense = np.zeros((s * b, 300), np.float32)
-    bi, bv = np.asarray(bundle.indices), np.asarray(bundle.values)
-    for i in range(s * b):
-        np.add.at(dense[i], bi[i], bv[i])
-    g, v = sstep_gram_and_v(jnp.asarray(dense), x, bk=128)
+    g, v = ell_gram_and_v(bundle.indices, bundle.values, x, n=300, bk=128)
     u = sstep_inner(g, v, s, b, eta)
     x_new = x + (eta / b) * ell_rmatvec(bundle, u)
 
