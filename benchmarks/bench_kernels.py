@@ -1,20 +1,95 @@
 """Pallas kernel micro-benchmarks (interpret mode — correctness-scale
 numbers only; the BlockSpec VMEM analysis is the TPU-relevant output).
+
+Besides the historical CSV rows, every run sweeps the autotuner's
+(bk, bm) panel grid over registry dataset profiles at both precisions
+and persists the table to ``BENCH_kernels.json`` (gated against
+``benchmarks/baselines/kernels.json`` by ``check_regression.py``; the
+kernels CI job uploads it). ``--sweep-panels`` widens the grid to every
+small registry dataset and a second bundle size:
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels --sweep-panels
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core.engine import ParallelSGDSchedule
+from repro.kernels import tune
 from repro.kernels.ell_gram import ell_gram_and_v
 from repro.kernels.ref import ell_gram_and_v_ref
 from repro.kernels.sstep_inner import sstep_inner
+from repro.sparse.synthetic import SM_STATS
+
+OUT_JSON = Path("BENCH_kernels.json")
+
+# default (CI) grid — --sweep-panels widens both axes
+SWEEP_DATASETS = ("rcv1-sm", "epsilon-sm", "uniform-sm")
+SWEEP_ROWS = ((4, 16),)  # (s, b) → 64-row bundles
+FULL_ROWS = ((4, 16), (8, 16))
 
 
-def run() -> None:
+def _sweep_panels(datasets, rows_grid) -> dict:
+    """The tuner's own candidate tables, (dataset × bundle × dtype),
+    re-run fresh (force=True into a scratch cache) so the JSON is a
+    measurement, not a cache read."""
+    import tempfile
+
+    out: dict = {"device": tune.device_kind(), "kernel_version": tune.KERNEL_VERSION}
+    sweep: dict = {}
+    with tempfile.TemporaryDirectory() as scratch:
+        for name in datasets:
+            st = SM_STATS[name]
+            for s, b in rows_grid:
+                for precision in ("fp32", "bf16"):
+                    sched = ParallelSGDSchedule.hybrid(
+                        2, s, b, 0.05, s, rounds=1, precision=precision
+                    )
+                    prof = tune.PanelProfile.from_stats(st, sched, p_c=2)
+                    rec = tune.tune_panel(
+                        prof, cache_dir=Path(scratch), force=True, repeats=3
+                    )
+                    entry: dict = {
+                        "best_bk": rec["bk"],
+                        "best_bm": rec["bm"],
+                        "best_us": rec["measured_s"] * 1e6,
+                    }
+                    static = None
+                    for c in rec["candidates"]:
+                        if c.get("skipped") is not None:
+                            continue
+                        bm_tag = "" if c["bm"] is None else f"_bm{c['bm']}"
+                        entry[f"bk{c['bk']}{bm_tag}_us"] = c["measured_s"] * 1e6
+                        if c["bk"] == tune.FALLBACK_BK and c["bm"] is None:
+                            static = c["measured_s"]
+                    if static is not None:
+                        entry["static512_us"] = static * 1e6
+                        entry["tuned_speedup"] = static / rec["measured_s"]
+                        entry["beats_static"] = bool(
+                            rec["measured_s"] < static
+                            and (rec["bk"], rec["bm"]) != (tune.FALLBACK_BK, None)
+                        )
+                    key = f"{name}/sb{s * b}"
+                    sweep.setdefault(key, {})[precision] = entry
+                    emit(
+                        f"kernels/panel-sweep/{key}/{precision}",
+                        entry["best_us"],
+                        f"best_bk={rec['bk']};best_bm={rec['bm']};"
+                        f"speedup_vs_512={entry.get('tuned_speedup', 1.0):.2f}x",
+                    )
+    out["panel_sweep"] = sweep
+    return out
+
+
+def run(sweep_panels: bool = False) -> None:
     # ---- engine bundle primitive: Pallas ELL-Gram vs dense-reference ----
     # The engine's inner loop runs the scatter-free ELL path; the dense
     # scatter (the retired pre-engine path, kernels/ref.py) is the
@@ -53,3 +128,31 @@ def run() -> None:
             t * 1e6,
             f"s={s};b={b};vmem_bytes={sb * sb * 4 + 2 * sb * 4}",
         )
+
+    # ---- autotuner panel sweep → BENCH_kernels.json ----
+    datasets = tuple(SM_STATS) if sweep_panels else SWEEP_DATASETS
+    rows_grid = FULL_ROWS if sweep_panels else SWEEP_ROWS
+    results = _sweep_panels(datasets, rows_grid)
+    OUT_JSON.write_text(json.dumps(results, indent=1, sort_keys=True))
+    winners = [
+        (k, p, e["best_bk"])
+        for k, per in results["panel_sweep"].items()
+        for p, e in per.items()
+        if e.get("beats_static")
+    ]
+    print(f"# panel sweep → {OUT_JSON} ({len(winners)} configs beat static bk=512)")
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="bench_kernels")
+    ap.add_argument(
+        "--sweep-panels",
+        action="store_true",
+        help="full (dataset × bundle × dtype) panel grid instead of the CI subset",
+    )
+    args = ap.parse_args(argv)
+    run(sweep_panels=args.sweep_panels)
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,11 @@ class Plan:
     b_star: float | None = None
     calibrated: bool = False
     recommended_delay: int = 0
+    # (bk, bm) from the kernel tuner's disk cache when schedule.bk=None
+    # opted in and a cached winner exists; None = tune (or fall back to
+    # the static 512) at build time. plan() only *reads* the cache —
+    # planning stays pure.
+    tuned_panel: tuple | None = None
 
     def summary(self) -> str:
         sched, mesh = self.spec.schedule, self.spec.mesh
@@ -66,6 +71,14 @@ class Plan:
                 f" [delay D={sched.delay}, hides {self.cost.overlap_saved:.3g} s/epoch; "
                 f"model recommends D={self.recommended_delay}]"
             )
+        if sched.bk is None:
+            if self.tuned_panel is not None:
+                bk, bm = self.tuned_panel
+                tag += f" [panel bk=auto→{bk} bm={bm} (tuner cache)]"
+            else:
+                tag += " [panel bk=auto (tuned at build)]"
+        if sched.precision != "fp32":
+            tag += f" [precision={sched.precision}: 2-byte Gram wire words]"
         machine = self.spec.machine + ("+calibrated" if self.calibrated else "")
         return (
             f"{self.spec.name or self.spec.dataset}: mesh {mesh.p_r}×{mesh.p_c} "
@@ -151,8 +164,22 @@ def plan(spec: ExperimentSpec, calibration: Calibration | None = None) -> Plan:
     st = dataset_stats(spec.dataset)
     sched, mesh = spec.schedule, spec.mesh
     cfg = HybridConfig(p_r=mesh.p_r, p_c=mesh.p_c, s=sched.s, b=sched.b, tau=sched.tau)
-    cost = hybrid_epoch_cost(st.m, st.n, st.zbar, cfg, machine, delay=sched.delay)
+    cost = hybrid_epoch_cost(
+        st.m, st.n, st.zbar, cfg, machine, delay=sched.delay,
+        # bf16 schedules ship 2-byte Gram words: the β·bytes Gram term
+        # halves, the fp32 weight sync is unchanged (Tables 2–3 word
+        # counts are precision-invariant — only the byte pricing moves).
+        gram_word_bytes=2 if sched.precision == "bf16" else None,
+    )
     regime = classify_regime(st.m, st.n, st.zbar, cfg, machine)
+    tuned_panel = None
+    if sched.bk is None:
+        # read-only probe of the kernel tuner's cache (never tunes here)
+        from repro.kernels.tune import PanelProfile, lookup_panel
+
+        rec = lookup_panel(PanelProfile.from_stats(st, sched, mesh.p_c))
+        if rec is not None:
+            tuned_panel = (rec["bk"], rec["bm"])
     return Plan(
         spec=spec,
         cost=cost,
@@ -163,4 +190,5 @@ def plan(spec: ExperimentSpec, calibration: Calibration | None = None) -> Plan:
         b_star=b_raw,
         calibrated=calibration is not None,
         recommended_delay=recommend_delay(st.m, st.n, st.zbar, cfg, machine),
+        tuned_panel=tuned_panel,
     )

@@ -124,7 +124,42 @@ class Session:
         self.input_spec = spec          # pre-plan (what checkpoints key on)
         self._plan: Plan = plan(spec)
         self.spec = self._plan.spec     # post-autotune (what executes)
+        autotuned_panels = self.spec.schedule.bk is None
+        if autotuned_panels:
+            # bk=None opted into the kernel autotuner: resolve to the
+            # cached (or freshly tuned) panel shape before anything
+            # compiles. Checkpoints still key on input_spec, so the
+            # tuned value never moves a content hash.
+            from repro.api.spec import dataset_stats
+            from repro.kernels import tune
+
+            profile = tune.PanelProfile.from_stats(
+                dataset_stats(self.spec.dataset),
+                self.spec.schedule,
+                self.spec.mesh.p_c,
+            )
+            bk, bm = tune.resolve_panel(profile)
+            sched = dataclasses.replace(
+                self.spec.schedule,
+                bk=bk,
+                bm=self.spec.schedule.bm if self.spec.schedule.bm is not None else bm,
+            )
+            self.spec = dataclasses.replace(self.spec, schedule=sched)
         self.bundle = build_problem(self.spec)
+        if autotuned_panels:
+            # autotune opt-in also owns the gram-path choice: a
+            # heavy-tailed ELL width (w ≫ s·b) flips the bundle build
+            # to the dense oracle (logged once in tune).
+            from repro.kernels import tune
+
+            sched = self.spec.schedule
+            built = self.bundle.team if self.bundle.team is not None else self.bundle.prob2d
+            width = int(built.indices.shape[-1])
+            gram = tune.select_gram_path(width, sched.s * sched.b, sched.gram)
+            if gram != sched.gram:
+                self.spec = dataclasses.replace(
+                    self.spec, schedule=dataclasses.replace(sched, gram=gram)
+                )
         n = self.bundle.dataset.A.n
         x0 = np.zeros(n, np.float32) if x0 is None else np.asarray(x0, np.float32)
 

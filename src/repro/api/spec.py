@@ -343,6 +343,15 @@ class ExperimentSpec:
         # resume dirs stay valid.
         if not self.schedule.delay:
             d["schedule"].pop("delay", None)
+        # bm/precision likewise: the untiled fp32 default serializes
+        # (and content-hashes) exactly as it did before the autotune +
+        # precision knobs existed. bk stays on the wire (it predates
+        # this layer); bk=None — the opt-in autotune sentinel — moves
+        # the hash, which is correct: a tuned run is a different run.
+        if self.schedule.bm is None:
+            d["schedule"].pop("bm", None)
+        if self.schedule.precision == "fp32":
+            d["schedule"].pop("precision", None)
         # objective/l2 are emitted only when non-default: a
         # default-logistic spec serializes (and content-hashes) exactly
         # as it did before the objective layer existed, so pre-existing

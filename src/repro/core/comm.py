@@ -87,6 +87,12 @@ class CommRate:
     words_per_call  per-rank payload words of one call.
     calls_per_round how many times the site executes per outer round
                     (the s-bundle loop issues τ/s Gram Allreduces).
+    word_bytes      on-wire bytes per word of this payload, captured
+                    from the traced leaf dtype (2 for a bf16 (G, v)
+                    collective, 4 for fp32 — the default). The word
+                    *counts* above stay the Table 2–3 closed forms
+                    regardless of precision; this is the β multiplier's
+                    other factor.
     """
 
     op: str
@@ -94,6 +100,7 @@ class CommRate:
     span: int
     words_per_call: int
     calls_per_round: int
+    word_bytes: int = 4
 
     @property
     def phases_per_call(self) -> int:
@@ -104,7 +111,12 @@ class CommRate:
         return 2 * math.ceil(math.log2(self.span))
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.word_bytes == 4:
+            # emitted only when non-default: fp32 ledgers serialize
+            # byte-identically to every pre-precision release.
+            del d["word_bytes"]
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "CommRate":
@@ -195,12 +207,39 @@ class CommLedger:
             r.calls_per_round * r.phases_per_call for r in self.rates if r.span > 1
         )
 
-    def bytes_per_round(self, word_bytes: int) -> float:
-        """On-wire bytes per rank per round (the β multiplier)."""
+    def bytes_per_round(self, word_bytes: int | None = None) -> float:
+        """On-wire bytes per rank per round (the β multiplier).
+
+        With ``word_bytes=None`` each call site is priced at its own
+        captured ``word_bytes`` (so a bf16 (G, v) Allreduce counts half
+        the fp32 bytes); an explicit ``word_bytes`` keeps the legacy
+        uniform override (every word priced at the machine's word)."""
+        if word_bytes is None:
+            return float(sum(
+                r.words_per_call * r.calls_per_round * r.word_bytes
+                for r in self.rates
+                if r.span > 1
+            ))
         return float(word_bytes) * (
             self._per_round("cols", "words_per_call")
             + self._per_round("rows", "words_per_call")
         )
+
+    def counted_bytes(self, rounds: int | None = None) -> dict[str, float]:
+        """Per-rank on-wire bytes over ``rounds``, at each call site's
+        captured ``word_bytes`` — the precision-aware twin of
+        ``counted_words`` (whose word counts are invariant)."""
+        r = self.rounds if rounds is None else int(rounds)
+
+        def axis_bytes(axis):
+            return float(r * sum(
+                rt.words_per_call * rt.calls_per_round * rt.word_bytes
+                for rt in self.rates
+                if rt.axis == axis and rt.span > 1
+            ))
+
+        gram, sync = axis_bytes("cols"), axis_bytes("rows")
+        return {"gram_bytes": gram, "sync_bytes": sync, "total_bytes": gram + sync}
 
     # ---- measured (timed runs) ----
 
@@ -267,6 +306,11 @@ class CommLedger:
             # derived, for human-readable reports (ignored on load)
             "counted": self.counted_words(),
         }
+        if any(r.word_bytes != 4 for r in self.rates):
+            # bytes are derived too, but only interesting (and only
+            # emitted) when some payload is narrower than a word —
+            # fp32 ledgers keep their pre-precision serialization.
+            d["counted_bytes"] = self.counted_bytes()
         if self.delay:
             # emitted only when nonzero: delay-0 ledgers serialize
             # byte-identically to every pre-overlap release.
@@ -328,6 +372,13 @@ def _tree_words(tree) -> int:
     return int(sum(math.prod(leaf.shape) for leaf in jax.tree_util.tree_leaves(tree)))
 
 
+def _tree_word_bytes(tree) -> int:
+    """On-wire bytes per word, from the traced leaf dtypes (the widest
+    leaf prices the payload; 4 when the tree carries no leaves)."""
+    sizes = [leaf.dtype.itemsize for leaf in jax.tree_util.tree_leaves(tree)]
+    return int(max(sizes)) if sizes else 4
+
+
 @dataclasses.dataclass(frozen=True)
 class Collectives:
     """The collective ops a round body issues, by kind.
@@ -380,6 +431,7 @@ class Collectives:
                 span=rec.spans.get("cols", 1),
                 words_per_call=int(words),
                 calls_per_round=int(calls_per_round),
+                word_bytes=_tree_word_bytes(tree),
             ))
             return tree
         if not self.on_mesh:
@@ -431,6 +483,7 @@ class Collectives:
                 span=rec.spans.get("rows", 1),
                 words_per_call=int(words),
                 calls_per_round=int(calls_per_round),
+                word_bytes=_tree_word_bytes(x),
             ))
             return x
         if not self.on_mesh:
@@ -453,6 +506,7 @@ class Collectives:
                 span=rec.spans.get("rows", 1),
                 words_per_call=int(words_per_call),
                 calls_per_round=int(calls_per_round),
+                word_bytes=_tree_word_bytes(xs),
             ))
         return jnp.mean(xs, axis=0)
 

@@ -50,6 +50,8 @@ from repro.core.engine import (
     check_delay,
     delayed_bundle_scan,
     inner_corrections,
+    unwire_gv,
+    wire_gv,
 )
 from repro.core.objective import LOGISTIC, Objective, get_objective
 from repro.core.problem import Problem, problem_loss
@@ -247,9 +249,18 @@ def _build_round_fn(prob: Hybrid2DProblem, sched: ParallelSGDSchedule,
             bi = jax.lax.dynamic_slice_in_dim(idx_blk, start, sb, axis=0)
             bv = jax.lax.dynamic_slice_in_dim(val_blk, start, sb, axis=0)
             # local partial (G, v) via the engine's shared primitive —
-            # then the row-team Allreduce (paper Table 3 payload)
-            g_part, v_part = bundle_gram_v(bi, bv, x_loc, n_loc, gram=gram_, bk=bk_)
-            g, v = comm.allreduce_cols((g_part, v_part), calls_per_round=bundles)
+            # then the row-team Allreduce (paper Table 3 payload; bf16
+            # words under the precision knob — the psum sums narrow
+            # payloads, corrections run on the f32 upcast)
+            g_part, v_part = bundle_gram_v(
+                bi, bv, x_loc, n_loc, gram=gram_, bk=bk_, bm=sched.bm,
+                precision=sched.precision,
+            )
+            g, v = comm.allreduce_cols(
+                wire_gv((g_part, v_part), sched.precision),
+                calls_per_round=bundles,
+            )
+            g, v = unwire_gv((g, v), sched.precision)
             u = inner_corrections(g, v, s, b_, eta_, objective)
             # Yᵀu stays local under column partitioning
             blk = EllBlock(indices=bi, values=bv, n=n_loc)
@@ -484,10 +495,16 @@ class HybridDriver:
         bv = jnp.tile(prob.values[0, 0], (reps, 1))[:sb]
         x_loc = jnp.zeros((prob.n_loc,), jnp.float32)
         compute = jax.jit(
-            lambda i, v, x: bundle_gram_v(i, v, x, prob.n_loc, gram=gram_, bk=sched.bk)
+            lambda i, v, x: bundle_gram_v(
+                i, v, x, prob.n_loc, gram=gram_, bk=sched.bk, bm=sched.bm,
+                precision=sched.precision,
+            )
         )
-        g0 = jnp.zeros((sb, sb), jnp.float32)
-        v0 = jnp.zeros((sb,), jnp.float32)
+        # the probed psum carries the wire dtype: a bf16 schedule's
+        # measured allreduce_gv reflects the halved payload
+        gv_dt = jnp.bfloat16 if sched.precision == "bf16" else jnp.float32
+        g0 = jnp.zeros((sb, sb), gv_dt)
+        v0 = jnp.zeros((sb,), gv_dt)
         ar = jax.jit(shard_map(
             lambda g, v: (jax.lax.psum(g, "cols"), jax.lax.psum(v, "cols")),
             mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),

@@ -78,8 +78,20 @@ class ParallelSGDSchedule:
     gram    bundle (G, v) backend: "pallas" (scatter-free ELL kernel,
             the production path), "blocked" (same math as pure jnp —
             what shard_map uses), "dense" (the retired densify oracle,
-            kernels/ref.py — tests only).
-    bk      column-panel width for the Gram kernels.
+            kernels/ref.py — tests only; also what the profile-driven
+            auto-select picks for heavy-tailed ELL widths).
+    bk      column-panel width for the Gram kernels. ``None`` opts into
+            the autotuner: the api layer resolves it to the cached
+            tuned value at build time (repro.kernels.tune); direct
+            engine callers fall back to the static 512.
+    bm      optional row tile for the panel expansion (the autotuner's
+            second knob). None = single-shot expansion (the original
+            path, and bitwise-identical to any bm).
+    precision   "fp32" (default — bitwise the pre-precision engine) or
+            "bf16": panels and MXU dots run bf16-compute /
+            fp32-accumulate, and the per-bundle (G, v) Allreduce ships
+            bf16 words (half the β·bytes payload; word counts, and
+            hence the Table 2–3 closed forms, are unchanged).
     interpret   Pallas interpret mode — True off-TPU (this container),
             False for the compiled Mosaic kernel on real hardware.
     p_c     column shards. Communication-only: it never changes the
@@ -106,10 +118,12 @@ class ParallelSGDSchedule:
     rounds: int = 1
     loss_every: int = 0
     gram: str = "pallas"
-    bk: int = 512
+    bk: int | None = 512
     interpret: bool = True
     p_c: int = 1
     delay: int = 0
+    bm: int | None = None
+    precision: str = "fp32"
 
     def __post_init__(self):
         # NOTE: s | τ is required by the *solver* (checked in
@@ -118,10 +132,18 @@ class ParallelSGDSchedule:
         # Likewise η > 0 is a solver-entry check (run_parallel_sgd /
         # make_hybrid_step): the engine internally normalizes schedules
         # to η = 0 for jit-cache keying, so only η < 0 is nonsense here.
-        for knob in ("p_r", "s", "b", "tau", "rounds", "bk", "p_c"):
+        for knob in ("p_r", "s", "b", "tau", "rounds", "p_c"):
             v = getattr(self, knob)
             if v < 1:
                 raise ValueError(f"{knob}={v!r} must be a positive integer")
+        for knob in ("bk", "bm"):  # None = resolve via the autotuner
+            v = getattr(self, knob)
+            if v is not None and v < 1:
+                raise ValueError(f"{knob}={v!r} must be a positive integer or None")
+        if self.precision not in ("fp32", "bf16"):
+            raise ValueError(
+                f"precision={self.precision!r} must be 'fp32' or 'bf16'"
+            )
         if self.loss_every < 0:
             raise ValueError(f"loss_every={self.loss_every} must be ≥ 0")
         if self.delay < 0:
@@ -179,8 +201,8 @@ class ParallelSGDSchedule:
 
 
 def bundle_gram_v(
-    indices, values, x, n: int, *, gram: str = "pallas", bk: int = 512,
-    interpret: bool = True,
+    indices, values, x, n: int, *, gram: str = "pallas", bk: int | None = 512,
+    bm: int | None = None, precision: str = "fp32", interpret: bool = True,
 ):
     """The shared s-bundle primitive: local (G, v) = (tril(YYᵀ,-1), Yx)
     for the ELL bundle Y, without densifying Y to (sb, n) in HBM.
@@ -188,14 +210,42 @@ def bundle_gram_v(
     Under column partitioning each shard computes its partial (G, v)
     with this same function and the row-team Allreduce (psum over
     "cols") sums them — tril commutes with the sum, so the simulated
-    and distributed paths share one primitive."""
+    and distributed paths share one primitive.
+
+    ``bk=None`` (the autotune sentinel, normally resolved at build time
+    by the api layer) falls back to the static 512 here. The dense
+    oracle has no panels, so bk/bm/precision do not apply to it — its
+    (G, v) is always the fp32 reference."""
+    bk = 512 if bk is None else bk
     if gram == "pallas":
-        return ell_gram_and_v(indices, values, x, n=n, bk=bk, interpret=interpret)
+        return ell_gram_and_v(
+            indices, values, x, n=n, bk=bk, bm=bm, precision=precision,
+            interpret=interpret,
+        )
     if gram == "blocked":
-        return ell_gram_and_v_blocked(indices, values, x, n=n, bk=bk)
+        return ell_gram_and_v_blocked(
+            indices, values, x, n=n, bk=bk, bm=bm, precision=precision
+        )
     if gram == "dense":
         return ell_gram_and_v_ref(indices, values, x, n)
     raise ValueError(f"gram={gram!r} not in {GRAM_METHODS}")
+
+
+def wire_gv(tree, precision: str):
+    """Cast a (G, v) payload to its on-wire dtype: bf16 under the bf16
+    precision knob (half the collective's bytes), untouched at fp32 —
+    both backends cast at the same point, so parity holds."""
+    if precision != "bf16":
+        return tree
+    return jax.tree_util.tree_map(lambda t: t.astype(jnp.bfloat16), tree)
+
+
+def unwire_gv(tree, precision: str, dtype=jnp.float32):
+    """Undo ``wire_gv`` after the collective: corrections and updates
+    accumulate in ``dtype`` (f32) regardless of the wire dtype."""
+    if precision != "bf16":
+        return tree
+    return jax.tree_util.tree_map(lambda t: t.astype(dtype), tree)
 
 
 def inner_corrections(
@@ -292,16 +342,22 @@ def delayed_bundle_scan(x, *, slice_bundle, bundles: int, n: int,
     def compute_issue(x, t):
         idx, val = slice_bundle(t)
         g, v = bundle_gram_v(idx, val, x, n, gram=gram_, bk=sched.bk,
+                             bm=sched.bm, precision=sched.precision,
                              interpret=sched.interpret)
         # issued here, consumed D bundles later (the s = 1 corner
         # stages the full (G, v) too — its distributed twin psums the
         # dense block either way, so counted payloads stay pinned).
-        g, v = comm.issue_allreduce_cols((g, v), calls_per_round=bundles)
+        # Under bf16 the staged payload is the wire dtype: the FIFO
+        # holds exactly what the in-flight Allreduce carries.
+        g, v = comm.issue_allreduce_cols(
+            wire_gv((g, v), sched.precision), calls_per_round=bundles
+        )
         return idx, val, g, v
 
     def consume_apply(x, entry, live):
         idx, val, g, v = entry
         g, v = comm.await_allreduce((g, v))
+        g, v = unwire_gv((g, v), sched.precision)
         u = inner_corrections(g, v, s, b, eta, objective)
         blk = EllBlock(indices=idx, values=val, n=n)
         upd = (eta / b) * ell_rmatvec(blk, u).astype(x.dtype)
@@ -317,6 +373,8 @@ def delayed_bundle_scan(x, *, slice_bundle, bundles: int, n: int,
     idx0, val0 = slice_bundle(0)
     width = idx0.shape[-1]
     gv_dtype = jnp.result_type(val0.dtype, x.dtype)
+    if sched.precision == "bf16":
+        gv_dtype = jnp.bfloat16  # the FIFO stages the wire payload
     buf = (
         jnp.zeros((d, sb, width), idx0.dtype),
         jnp.zeros((d, sb, width), val0.dtype),
@@ -388,18 +446,23 @@ def _team_inner_iterations(indices, values, n: int, x, round_idx, eta,
             # numerically unused), so the counted payload is pinned to
             # the same sb² + sb words.
             yx = COUNTING.allreduce_cols(
-                ell_matvec(bundle, x),
+                wire_gv(ell_matvec(bundle, x), sched.precision),
                 calls_per_round=bundles,
                 words_per_call=sb * sb + sb,
             )
+            yx = unwire_gv(yx, sched.precision, x.dtype)
             u = objective.residual(yx)
         else:
             g, v = bundle_gram_v(idx, val, x, n, gram=sched.gram, bk=sched.bk,
+                                 bm=sched.bm, precision=sched.precision,
                                  interpret=sched.interpret)
             # row-team Allreduce of the bundle (G, v) — identity here
             # (the simulated rank computes the full reduction), the
             # recorded payload when the round body is captured.
-            g, v = COUNTING.allreduce_cols((g, v), calls_per_round=bundles)
+            g, v = COUNTING.allreduce_cols(
+                wire_gv((g, v), sched.precision), calls_per_round=bundles
+            )
+            g, v = unwire_gv((g, v), sched.precision)
             u = inner_corrections(g, v, s, b, eta, objective)
         if lam == 0.0:
             return x + (eta / b) * ell_rmatvec(bundle, u).astype(x.dtype), None
@@ -630,7 +693,8 @@ def engine_phase_probes(tp: TeamProblem, sched: ParallelSGDSchedule) -> dict:
     x0 = jnp.zeros((tp.n,), jnp.float32)
     compute = jax.jit(
         lambda i, v, x: bundle_gram_v(
-            i, v, x, tp.n, gram=sched.gram, bk=sched.bk, interpret=sched.interpret
+            i, v, x, tp.n, gram=sched.gram, bk=sched.bk, bm=sched.bm,
+            precision=sched.precision, interpret=sched.interpret,
         )
     )
     g0 = jnp.zeros((sb, sb), jnp.float32)

@@ -87,6 +87,7 @@ def hybrid_epoch_cost(
     beta_row: float | None = None,
     beta_col: float | None = None,
     delay: int = 0,
+    gram_word_bytes: int | None = None,
 ) -> CostBreakdown:
     """Eq. (4). γ defaults to the cache-aware value at the per-rank
     weight-slab working set (n·w/p_c); β defaults to the rank-aware
@@ -97,8 +98,15 @@ def hybrid_epoch_cost(
     phases) has D bundle-computes to hide behind, so the critical path
     pays max(gram_comm, D·compute) in place of gram_comm + D·compute —
     equivalently ``overlap_saved = min(gram_comm, D·compute)`` per
-    epoch. The synchronous column sync is never overlapped."""
+    epoch. The synchronous column sync is never overlapped.
+
+    ``gram_word_bytes`` prices the (G, v) wire format separately from
+    the machine word (default: equal): a ``precision="bf16"`` schedule
+    ships 2-byte Gram words, halving the β·bytes Gram term while the
+    Table 2–3 *word* counts — and the sync term, whose weights stay
+    fp32 — are untouched."""
     w = machine.word_bytes
+    gw = w if gram_word_bytes is None else gram_word_bytes
     if gamma is None:
         gamma = machine.gamma_flop(n * w / cfg.p_c)
     if beta_row is None:  # row-team (Gram) Allreduce spans p_c ranks
@@ -113,7 +121,7 @@ def hybrid_epoch_cost(
     lat_row = m * 2 * alpha_row * _log2(p_c) / (s * b)
     lat_col = m * 2 * alpha_col * _log2(p_r) / (s * b * tau)
     latency = lat_row + lat_col
-    gram_bw = m * ((s - 1) * b / 2) * w * beta_row
+    gram_bw = m * ((s - 1) * b / 2) * gw * beta_row
     sync_bw = m * n * w * beta_col / (s * b * tau * p_c)
     overlap_saved = 0.0
     if delay >= 1 and p_c > 1:

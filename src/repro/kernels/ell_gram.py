@@ -27,6 +27,20 @@ The strict-lower mask (only l < j corrections are applied by the s-step
 inner loop) lands on the final panel. Accumulation is float32
 (MXU-faithful) regardless of input dtype.
 
+Two tuning knobs, swept by ``repro.kernels.tune``:
+
+* ``bk`` — column-panel width (the VMEM tile's second dimension);
+* ``bm`` — optional row tile for the one-hot expansion: the (sb, w, bk)
+  one-hot workspace is built ``bm`` rows at a time, shrinking the
+  expansion working set from sb·w·bk to bm·w·bk words. ``bm=None``
+  (default) is the original single-shot expansion; any ``bm`` is
+  bitwise-identical to it (each row's contraction is independent).
+
+Precision: ``precision="bf16"`` builds the panel in bfloat16 and runs
+the MXU dots bf16-in / f32-accumulate (``preferred_element_type``);
+G and v stay float32. ``precision="fp32"`` (default) traces exactly
+the original kernel.
+
 VMEM per step: sb·w (idx + val) + sb·bk (one-hot workspace) + sb·sb (G)
 + bk (x panel) words.
 
@@ -55,25 +69,50 @@ def _prep_panels(values, x, n: int, bk: int):
     return acc, x, n_pad // bk
 
 
-def panel_from_ell(indices, values, k, bk: int, acc_dtype) -> jnp.ndarray:
+def _panel_rows(indices, values, k, bk: int, dtype) -> jnp.ndarray:
+    """One-hot contraction for one row chunk: (rows, bk) in ``dtype``."""
+    local = indices - k * bk  # (rows, w)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
+    onehot = (local[:, :, None] == lanes).astype(dtype)  # (rows, w, bk)
+    return jax.lax.dot_general(
+        values.astype(dtype)[:, None, :],  # (rows, 1, w)
+        onehot,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=dtype,
+    )[:, 0, :]  # (rows, bk)
+
+
+def panel_from_ell(
+    indices, values, k, bk: int, acc_dtype, compute_dtype=None, bm: int | None = None
+) -> jnp.ndarray:
     """Expand the ELL bundle's column panel k into a dense (sb, bk) tile.
 
     Panel-local one-hot contraction: entries outside [k·bk, (k+1)·bk)
     match no lane and vanish; ELL pad entries (idx 0, val 0) contribute
     zero value. Shared by the Pallas kernel body and the pure-jnp
-    blocked path (shard_map-safe)."""
-    local = indices - k * bk  # (sb, w)
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
-    onehot = (local[:, :, None] == lanes).astype(acc_dtype)  # (sb, w, bk)
-    return jax.lax.dot_general(
-        values.astype(acc_dtype)[:, None, :],  # (sb, 1, w)
-        onehot,
-        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=acc_dtype,
-    )[:, 0, :]  # (sb, bk)
+    blocked path (shard_map-safe).
+
+    ``compute_dtype`` (e.g. bfloat16) overrides the expansion dtype —
+    None keeps ``acc_dtype``, the original path. ``bm`` tiles the
+    expansion ``bm`` rows at a time (bitwise-identical: rows are
+    independent); None builds all rows in one shot."""
+    dtype = acc_dtype if compute_dtype is None else compute_dtype
+    sb = indices.shape[0]
+    if bm is None or bm >= sb:
+        return _panel_rows(indices, values, k, bk, dtype)
+    return jnp.concatenate(
+        [
+            _panel_rows(indices[r : r + bm], values[r : r + bm], k, bk, dtype)
+            for r in range(0, sb, bm)
+        ],
+        axis=0,
+    )
 
 
-def _ell_gram_kernel(idx_ref, val_ref, x_ref, g_ref, v_ref, *, n_panels: int, bk: int):
+def _ell_gram_kernel(
+    idx_ref, val_ref, x_ref, g_ref, v_ref, *,
+    n_panels: int, bk: int, compute_dtype=None, bm: int | None = None,
+):
     k = pl.program_id(0)
 
     @pl.when(k == 0)
@@ -81,9 +120,14 @@ def _ell_gram_kernel(idx_ref, val_ref, x_ref, g_ref, v_ref, *, n_panels: int, bk
         g_ref[...] = jnp.zeros_like(g_ref)
         v_ref[...] = jnp.zeros_like(v_ref)
 
-    panel = panel_from_ell(idx_ref[...], val_ref[...], k, bk, g_ref.dtype)  # (sb, bk)
+    panel = panel_from_ell(
+        idx_ref[...], val_ref[...], k, bk, g_ref.dtype, compute_dtype, bm
+    )  # (sb, bk)
+    xblk = x_ref[...]
+    if compute_dtype is not None:
+        xblk = xblk.astype(compute_dtype)
     g_ref[...] += jnp.dot(panel, panel.T, preferred_element_type=g_ref.dtype)
-    v_ref[...] += jnp.dot(panel, x_ref[...], preferred_element_type=v_ref.dtype)
+    v_ref[...] += jnp.dot(panel, xblk, preferred_element_type=v_ref.dtype)
 
     @pl.when(k == n_panels - 1)
     def _mask():
@@ -93,6 +137,16 @@ def _ell_gram_kernel(idx_ref, val_ref, x_ref, g_ref, v_ref, *, n_panels: int, bk
         g_ref[...] = jnp.where(row > col, g_ref[...], 0.0)
 
 
+def compute_dtype_for(precision: str):
+    """The panel/MXU compute dtype for a schedule ``precision`` knob:
+    None (trace the original fp32 path) or jnp.bfloat16."""
+    if precision == "fp32":
+        return None
+    if precision == "bf16":
+        return jnp.bfloat16
+    raise ValueError(f"precision must be 'fp32' or 'bf16', got {precision!r}")
+
+
 def ell_gram_and_v(
     indices: jnp.ndarray,  # (sb, w) int32
     values: jnp.ndarray,  # (sb, w)
@@ -100,6 +154,8 @@ def ell_gram_and_v(
     *,
     n: int,
     bk: int = 512,
+    bm: int | None = None,
+    precision: str = "fp32",
     interpret: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(G, v) = (tril(Y Yᵀ, -1), Y·x) for the ELL bundle Y — scatter-free.
@@ -109,9 +165,12 @@ def ell_gram_and_v(
     """
     sb, w = values.shape
     acc, x, n_panels = _prep_panels(values, x, n, bk)
+    cd = compute_dtype_for(precision)
 
     g, v = pl.pallas_call(
-        functools.partial(_ell_gram_kernel, n_panels=n_panels, bk=bk),
+        functools.partial(
+            _ell_gram_kernel, n_panels=n_panels, bk=bk, compute_dtype=cd, bm=bm
+        ),
         grid=(n_panels,),
         in_specs=[
             pl.BlockSpec((sb, w), lambda k: (0, 0)),
@@ -138,6 +197,8 @@ def ell_gram_and_v_blocked(
     *,
     n: int,
     bk: int = 512,
+    bm: int | None = None,
+    precision: str = "fp32",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Pure-jnp panel streaming — same scatter-free math as the Pallas
     kernel, expressed as a lax.scan over column panels.
@@ -147,11 +208,14 @@ def ell_gram_and_v_blocked(
     working set is one (sb, bk) panel."""
     sb, w = values.shape
     acc, x, n_panels = _prep_panels(values, x, n, bk)
+    cd = compute_dtype_for(precision)
 
     def panel_step(carry, k):
         g, v = carry
-        panel = panel_from_ell(indices, values, k, bk, acc)
+        panel = panel_from_ell(indices, values, k, bk, acc, cd, bm)
         xblk = jax.lax.dynamic_slice_in_dim(x, k * bk, bk)
+        if cd is not None:
+            xblk = xblk.astype(cd)
         return (
             g + jnp.dot(panel, panel.T, preferred_element_type=acc),
             v + jnp.dot(panel, xblk, preferred_element_type=acc),

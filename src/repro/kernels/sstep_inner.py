@@ -23,15 +23,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _inner_kernel(g_ref, v_ref, u_ref, *, s: int, b: int, eta_over_b: float):
+def _inner_kernel(
+    g_ref, v_ref, u_ref, *, s: int, b: int, eta_over_b: float, compute_dtype=None
+):
     u_ref[...] = jnp.zeros_like(u_ref)
 
     def step(j, _):
         # z_j = v_j + (η/b)·G_panel·u   (u zero beyond filled blocks;
         # G is strictly lower so in-block terms multiply zeros)
         panel = g_ref[pl.dslice(j * b, b), :]  # (b, sb)
+        u = u_ref[:, 0]
+        if compute_dtype is not None:
+            panel = panel.astype(compute_dtype)
+            u = u.astype(compute_dtype)
         zj = v_ref[pl.dslice(j * b, b), 0] + eta_over_b * (
-            jnp.dot(panel, u_ref[:, 0], preferred_element_type=jnp.float32)
+            jnp.dot(panel, u, preferred_element_type=jnp.float32)
         )
         uj = jnp.where(zj >= 0, jnp.exp(-zj) / (1 + jnp.exp(-zj)), 1 / (1 + jnp.exp(zj)))
         u_ref[pl.dslice(j * b, b), 0] = uj.astype(u_ref.dtype)
@@ -47,13 +53,22 @@ def sstep_inner(
     b: int,
     eta: float,
     *,
+    precision: str = "fp32",
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """u (sb,) such that u_j = sigmoid_residual(v_j + (η/b) Σ_{l<j} G_{jl} u_l)."""
+    """u (sb,) such that u_j = sigmoid_residual(v_j + (η/b) Σ_{l<j} G_{jl} u_l).
+
+    ``precision="bf16"`` runs the G-panel·u MXU dot bf16-in /
+    f32-accumulate; z, the residual, and u stay float32."""
+    from repro.kernels.ell_gram import compute_dtype_for
+
+    cd = compute_dtype_for(precision)
     sb = s * b
     assert g.shape == (sb, sb) and v.shape == (sb,)
     out = pl.pallas_call(
-        functools.partial(_inner_kernel, s=s, b=b, eta_over_b=eta / b),
+        functools.partial(
+            _inner_kernel, s=s, b=b, eta_over_b=eta / b, compute_dtype=cd
+        ),
         grid=(1,),
         in_specs=[
             pl.BlockSpec((sb, sb), lambda i: (0, 0)),

@@ -28,6 +28,7 @@ import re
 PEAK_FLOPS = 197e12  # bf16
 HBM_BW = 819e9  # B/s
 ICI_BW = 50e9  # B/s per link (effective, see DESIGN.md)
+VMEM_BYTES = 16 * 2**20  # per-core VMEM budget the panel tiler fits in
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -177,6 +178,116 @@ class RooflineTerms:
             "useful_ratio": self.useful_flops_ratio,
             "collectives": self.collective_breakdown,
         }
+
+
+# ---- analytic panel roofline (repro.kernels.tune's justification) ----
+#
+# The ELL-Gram kernel walks ⌈n/bk⌉ column panels; per panel it expands
+# the (sb, w) ELL block into a (sb, bk) dense panel (one-hot contraction,
+# 2·sb·w·bk FLOPs), accumulates G += P·Pᵀ (2·sb²·bk) and v += P·x_blk
+# (2·sb·bk). The ELL block itself is re-streamed from HBM once per panel
+# (it is VMEM-resident *within* a grid step, not across steps) — that
+# re-read is the bk tradeoff the tuner prices: larger panels cut the
+# ⌈n/bk⌉ re-reads but grow the (bm, bk) VMEM tile.
+
+
+def panel_vmem_bytes(
+    rows: int, width: int, bk: int, bm: int | None = None, compute_bytes: int = 4
+) -> int:
+    """VMEM working set of one ell_gram grid step: the (bm, bk) expanded
+    panel tile at compute precision plus the resident ELL block
+    (indices + values), G, v, and x panel (all f32/i32)."""
+    bm = rows if bm is None or bm > rows else bm
+    panel = bm * bk * compute_bytes
+    resident = rows * width * (4 + 4) + rows * rows * 4 + rows * 4 + bk * 4
+    return panel + resident
+
+
+def panel_flops(rows: int, width: int, n: int, bk: int) -> float:
+    """Total FLOPs of one (G, v) bundle build at panel width bk."""
+    n_panels = -(-n // bk)
+    per_panel = 2 * rows * width * bk + 2 * rows * rows * bk + 2 * rows * bk
+    return float(n_panels * per_panel)
+
+
+def panel_hbm_bytes(
+    rows: int, width: int, n: int, bk: int, compute_bytes: int = 4
+) -> float:
+    """HBM traffic of one bundle build: the ELL block re-streamed once
+    per panel, x streamed once, G and v written once."""
+    n_panels = -(-n // bk)
+    ell = n_panels * rows * width * (4 + 4)  # int32 indices + f32 values
+    x = n_panels * bk * 4
+    out = rows * rows * 4 + rows * 4
+    return float(ell + x + out)
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelRoofline:
+    """Attainable-time bound for one (rows, width, n, bk, bm) panel
+    configuration — what the autotuner cross-checks measured wall time
+    against (a measurement below the bound is a timer glitch; far above
+    it, headroom the next candidate may claim)."""
+
+    rows: int
+    width: int
+    n: int
+    bk: int
+    bm: int | None
+    flops: float
+    hbm_bytes: float
+    vmem_bytes: int
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def attainable_s(self) -> float:
+        """Roofline lower bound on the bundle build (max of the terms)."""
+        return max(self.compute_s, self.memory_s)
+
+    @property
+    def dominant(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+
+def panel_roofline(
+    rows: int,
+    width: int,
+    n: int,
+    bk: int,
+    bm: int | None = None,
+    precision: str = "fp32",
+) -> PanelRoofline:
+    """The attainable-FLOP/s justification for one tuner candidate.
+
+    ``precision`` prices the MXU: bf16 panels run at the full PEAK_FLOPS
+    (the constant is the bf16 peak) with 2-byte panel tiles; fp32 halves
+    the peak and doubles the tile."""
+    cb = 2 if precision == "bf16" else 4
+    peak = PEAK_FLOPS if precision == "bf16" else PEAK_FLOPS / 2
+    return PanelRoofline(
+        rows=rows,
+        width=width,
+        n=n,
+        bk=bk,
+        bm=bm,
+        flops=panel_flops(rows, width, n, bk),
+        hbm_bytes=panel_hbm_bytes(rows, width, n, bk, cb),
+        vmem_bytes=panel_vmem_bytes(rows, width, bk, bm, cb),
+        peak_flops=peak,
+    )
 
 
 def extrapolate_depth(v1: float, v2: float, n_periods: int) -> float:
